@@ -1,0 +1,80 @@
+"""Paper Fig. 6 reproduction: II found by SAT-MapIt vs the heuristic SoA
+stand-in, per benchmark x CGRA size (2x2 .. 5x5). Lower is better; None
+means no mapping found within budget (the paper's black/red marks)."""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, Optional
+
+from repro.core import suite
+from repro.core.baseline import BaselineConfig, map_heuristic
+from repro.core.cgra import CGRA
+from repro.core.mapper import MapperConfig, map_loop
+
+SIZES = ["2x2", "3x3", "4x4", "5x5"]
+
+
+def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
+        routing: bool = False) -> Dict:
+    names = names or suite.names()
+    out: Dict[str, Dict] = {}
+    for size in SIZES:
+        r, c = (int(x) for x in size.split("x"))
+        cgra = CGRA(r, c)
+        for name in names:
+            g = suite.get(name)
+            t0 = time.time()
+            rs = map_loop(g, cgra, MapperConfig(
+                solver="auto", timeout_s=timeout_s, routing=routing))
+            t_sat = time.time() - t0
+            t0 = time.time()
+            rh = map_heuristic(g, cgra, BaselineConfig(
+                n_restarts=heuristic_restarts, timeout_s=timeout_s))
+            t_heur = time.time() - t0
+            out[f"{name}/{size}"] = {
+                "sat_ii": rs.ii, "heur_ii": rh.ii,
+                "sat_time": round(t_sat, 3), "heur_time": round(t_heur, 3),
+                "mii": rs.mii,
+                "sat_route_nodes": rs.n_route_nodes,
+            }
+    return out
+
+
+def summarize(results: Dict) -> Dict:
+    """The paper's headline stats over all cells."""
+    better = worse = equal = sat_only = heur_only = 0
+    for k, v in results.items():
+        si, hi = v["sat_ii"], v["heur_ii"]
+        if si is not None and hi is None:
+            sat_only += 1
+        elif si is None and hi is not None:
+            heur_only += 1
+        elif si is None and hi is None:
+            equal += 1
+        elif si < hi:
+            better += 1
+        elif si > hi:
+            worse += 1
+        else:
+            equal += 1
+    n = len(results)
+    return {"cells": n, "sat_better": better, "sat_only_found": sat_only,
+            "equal": equal, "sat_worse": worse, "heur_only_found": heur_only,
+            "sat_better_or_only_pct": round(
+                100.0 * (better + sat_only) / max(n, 1), 2)}
+
+
+def main(quick: bool = False) -> None:
+    names = ["sha", "gsm", "srand", "bitcount", "nw"] if quick else None
+    res = run(timeout_s=30 if quick else 120, names=names,
+              heuristic_restarts=10 if quick else 30)
+    print("benchmark/size,mii,sat_ii,heur_ii,sat_time_s,heur_time_s")
+    for k, v in res.items():
+        print(f"{k},{v['mii']},{v['sat_ii']},{v['heur_ii']},"
+              f"{v['sat_time']},{v['heur_time']}")
+    print(json.dumps(summarize(res)))
+
+
+if __name__ == "__main__":
+    main()

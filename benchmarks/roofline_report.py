@@ -1,0 +1,76 @@
+"""Render the §Roofline / §Dry-run tables from the dry-run JSONL."""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        # keep the LAST record per cell (reruns supersede)
+        seen[(r["arch"], r["shape"], r["mesh"],
+              json.dumps(r.get("overrides")))] = r
+    return list(seen.values())
+
+
+def roofline_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | bottleneck | compute s | memory s | "
+           "collective s | useful FLOP ratio | HBM GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16" or r.get("overrides"):
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — skipped: "
+                       f"{r['reason']} | | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("total_bytes", 0) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['bottleneck'][:-2]} | "
+            f"{rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | "
+            f"{r.get('useful_flop_ratio', 0):.2f} | {mem:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile s | HLO GFLOPs/dev | "
+           "wire GB/dev | HBM GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("overrides"):
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} | | | | |")
+            continue
+        cc = r.get("cost_corrected") or {
+            "flops": r["cost"].get("flops", 0),
+            "wire_bytes": r["collectives"]["wire_bytes"]}
+        mem = r.get("memory", {}).get("total_bytes", 0) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('compile_s', 0):.1f} | {cc['flops']/1e9:.0f} | "
+            f"{cc['wire_bytes']/1e9:.1f} | {mem:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final.jsonl"
+    rows = load(path)
+    print("## Roofline (single-pod 16x16, per device)\n")
+    print(roofline_table(rows))
+    print("\n## Dry-run (all cells)\n")
+    print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end driver: train a reduced-config LM for a few hundred steps
+with checkpointing, crash recovery, and loss tracking.
+
+    PYTHONPATH=src python examples/train_lm.py --arch minitron_8b --steps 200
+
+Uses the same train_loop as launch/train.py — this is the deliverable-(b)
+end-to-end example; at pod scale the identical step function is what
+launch/dryrun.py lowers against the 512-chip production mesh.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron_8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    print(f"training {cfg.name} ({cfg.family}) for {args.steps} steps")
+    out = train_loop(cfg, steps=args.steps, global_batch=8, seq_len=64,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=50, resume=True,
+                     log_every=20)
+    out.pop("params", None)
+    print({k: round(float(v), 4) for k, v in out.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""CGRA architecture model.
+
+The target architecture (paper Fig. 1): a 2-D mesh of processing elements
+(PEs). Each PE has a single-cycle ALU, ``n_regs`` local registers, and an
+output register readable by its 4-neighbours in later cycles. Memory lines
+give (by default all) PEs load/store access.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import FrozenSet, Tuple
+
+
+@dataclass(frozen=True)
+class CGRA:
+    rows: int
+    cols: int
+    n_regs: int = 4
+    topology: str = "mesh"  # "mesh" (paper) | "torus" | "diag"
+    # PE ids with memory access; None -> all PEs can load/store (paper default)
+    mem_pes: Tuple[int, ...] | None = None
+
+    @property
+    def n_pes(self) -> int:
+        return self.rows * self.cols
+
+    def coords(self, p: int) -> Tuple[int, int]:
+        return divmod(p, self.cols)
+
+    def pe(self, r: int, c: int) -> int:
+        return r * self.cols + c
+
+    @cached_property
+    def _neighbors(self) -> Tuple[FrozenSet[int], ...]:
+        out = []
+        for p in range(self.n_pes):
+            r, c = self.coords(p)
+            deltas = [(-1, 0), (1, 0), (0, -1), (0, 1)]
+            if self.topology == "diag":
+                deltas += [(-1, -1), (-1, 1), (1, -1), (1, 1)]
+            acc = set()
+            for dr, dc in deltas:
+                nr, nc = r + dr, c + dc
+                if self.topology == "torus":
+                    acc.add(self.pe(nr % self.rows, nc % self.cols))
+                elif 0 <= nr < self.rows and 0 <= nc < self.cols:
+                    acc.add(self.pe(nr, nc))
+            out.append(frozenset(acc))
+        return tuple(out)
+
+    def neighbors(self, p: int) -> FrozenSet[int]:
+        """PEs whose output register PE ``p``'s operands can read (excl. self)."""
+        return self._neighbors[p]
+
+    def reachable(self, src: int, dst: int) -> bool:
+        """True if a value produced on ``src`` is directly consumable on ``dst``."""
+        return src == dst or dst in self._neighbors[src]
+
+    def can_mem(self, p: int) -> bool:
+        return self.mem_pes is None or p in self.mem_pes
+
+    def __str__(self) -> str:  # pragma: no cover
+        return f"CGRA({self.rows}x{self.cols}, {self.topology}, {self.n_regs} regs)"
+
+
+def cgra_from_name(name: str, **kw) -> CGRA:
+    """'4x4' -> CGRA(4, 4)."""
+    r, c = name.lower().split("x")
+    return CGRA(int(r), int(c), **kw)

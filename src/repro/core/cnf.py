@@ -1,0 +1,81 @@
+"""CNF container + cardinality encodings.
+
+Variables are positive ints (DIMACS convention); a literal is ±var. The
+paper's C1 uses the naive pairwise at-most-one (its Eq. 1 ``M(n)`` set); we
+also provide the Sinz sequential encoding as a beyond-paper option — it turns
+O(k^2) binary clauses into O(k) ternary ones, which dominates encode time on
+big KMS instances.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+
+class CNF:
+    def __init__(self):
+        self.n_vars = 0
+        self.clauses: List[Tuple[int, ...]] = []
+
+    def new_var(self) -> int:
+        self.n_vars += 1
+        return self.n_vars
+
+    def new_vars(self, k: int) -> List[int]:
+        return [self.new_var() for _ in range(k)]
+
+    def add(self, *lits: int) -> None:
+        assert lits, "empty clause added directly (use add_false)"
+        self.clauses.append(tuple(lits))
+
+    def add_clause(self, lits: Sequence[int]) -> None:
+        self.clauses.append(tuple(lits))
+
+    # ------------------------------------------------------------ cardinality
+    def at_least_one(self, lits: Sequence[int]) -> None:
+        self.add_clause(list(lits))
+
+    def at_most_one(self, lits: Sequence[int], encoding: str = "pairwise") -> None:
+        lits = list(lits)
+        if len(lits) <= 1:
+            return
+        if encoding == "pairwise" or len(lits) <= 4:
+            for i in range(len(lits)):
+                for j in range(i + 1, len(lits)):
+                    self.add(-lits[i], -lits[j])
+        elif encoding == "sequential":
+            # Sinz 2005 LTSEQ: registers s_i == "some lit among first i+1 true"
+            s = self.new_vars(len(lits) - 1)
+            self.add(-lits[0], s[0])
+            for i in range(1, len(lits) - 1):
+                self.add(-lits[i], s[i])
+                self.add(-s[i - 1], s[i])
+                self.add(-lits[i], -s[i - 1])
+            self.add(-lits[-1], -s[-1])
+        else:
+            raise ValueError(f"unknown AMO encoding {encoding!r}")
+
+    def exactly_one(self, lits: Sequence[int], encoding: str = "pairwise") -> None:
+        self.at_least_one(lits)
+        self.at_most_one(lits, encoding)
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def n_clauses(self) -> int:
+        return len(self.clauses)
+
+    def stats(self) -> Dict[str, int]:
+        return {"vars": self.n_vars, "clauses": self.n_clauses,
+                "lits": sum(len(c) for c in self.clauses)}
+
+    def to_dimacs(self) -> str:
+        head = f"p cnf {self.n_vars} {self.n_clauses}\n"
+        body = "\n".join(" ".join(map(str, c)) + " 0" for c in self.clauses)
+        return head + body + "\n"
+
+    def check(self, assignment: Sequence[bool]) -> bool:
+        """assignment[v-1] is the value of var v. True iff all clauses sat."""
+        for cl in self.clauses:
+            if not any((lit > 0) == assignment[abs(lit) - 1] for lit in cl):
+                return False
+        return True

@@ -1,0 +1,153 @@
+"""SAT encoding of the modulo-scheduling mapping problem (paper §IV-C).
+
+Literals are x_{n,p,c,it}: node ``n`` placed on PE ``p`` at kernel cycle ``c``
+with KMS iteration label ``it``. Flat mobility-schedule time is
+``t = it*II + c``; C3's Eq. 3 window is exactly the flat-time window
+
+    1 - delta*II  <=  t_d - t_s  <=  (1 - delta)*II
+
+for an edge of loop-carried distance ``delta`` (delta=0 reduces to the
+paper's "c_d > c_s if same iteration label, c_d <= c_s if labels differ by
+one"). The upper bound is forced by the non-rotating register file: a value
+is overwritten by the producer's next kernel instance II cycles later.
+
+Clause families:
+  C1  exactly-one position per node                  (paper Eq. 1)
+  C2  at-most-one node per (PE, kernel cycle)        (paper Eq. 2)
+  C3  per-edge adjacency + timing. The paper ORs Eq. 4/5 conjunction terms;
+      given C1, that disjunction is equivalent to the implication form used
+      here: for every destination literal w,  (¬w ∨ compatible-src-lits...).
+      Delivery mode (internal vs. output register, Eq. 4 vs. 5) is resolved
+      post-SAT by register allocation, which models both.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cgra import CGRA
+from .cnf import CNF
+from .dfg import DFG
+from .schedule import KMS, asap_alap, build_kms
+
+
+@dataclass(frozen=True)
+class Lit:
+    node: int
+    pe: int
+    cycle: int
+    iteration: int
+
+
+@dataclass
+class Encoding:
+    cnf: CNF
+    kms: KMS
+    cgra: CGRA
+    dfg: DFG
+    var_of: Dict[Tuple[int, int, int, int], int]   # (n,p,c,it) -> var
+    info: Dict[int, Lit]                           # var -> literal info
+    stats: Dict[str, int] = field(default_factory=dict)
+
+    def decode(self, model: Sequence[bool]) -> Dict[int, Tuple[int, int, int]]:
+        """model[v-1] -> placement {node: (pe, cycle, iteration)}."""
+        placement: Dict[int, Tuple[int, int, int]] = {}
+        for var, lit in self.info.items():
+            if model[var - 1]:
+                if lit.node in placement:
+                    raise ValueError(f"node {lit.node} assigned twice")
+                placement[lit.node] = (lit.pe, lit.cycle, lit.iteration)
+        missing = set(self.dfg.nodes) - set(placement)
+        if missing:
+            raise ValueError(f"unplaced nodes {sorted(missing)}")
+        return placement
+
+
+class EncoderSession:
+    """Holds II-independent precomputation (windows, allowed PEs, neighbour
+    tables) so the Fig. 3 iterative loop re-encodes only what II changes."""
+
+    def __init__(self, dfg: DFG, cgra: CGRA, amo: str = "pairwise"):
+        dfg.validate()
+        self.dfg = dfg
+        self.cgra = cgra
+        self.amo = amo
+        self.asap, self.alap, self.length = asap_alap(dfg)
+        self.allowed_pes: Dict[int, List[int]] = {
+            nid: [p for p in range(cgra.n_pes)
+                  if (not node.is_mem) or cgra.can_mem(p)]
+            for nid, node in dfg.nodes.items()
+        }
+        # src PE -> PEs that can consume from it (self + neighbours)
+        self.consumers: List[List[int]] = [
+            sorted({p} | set(cgra.neighbors(p))) for p in range(cgra.n_pes)
+        ]
+
+    # ---------------------------------------------------------------- build
+    def encode(self, ii: int) -> Encoding:
+        dfg, cgra = self.dfg, self.cgra
+        kms = build_kms(dfg, ii)
+        cnf = CNF()
+        var_of: Dict[Tuple[int, int, int, int], int] = {}
+        info: Dict[int, Lit] = {}
+
+        # literal creation: one var per (node, allowed PE, KMS candidate)
+        by_node: Dict[int, List[int]] = {}
+        by_slot: Dict[Tuple[int, int], List[int]] = {}  # (p, c) -> vars
+        for nid in dfg.nodes:
+            lits = []
+            for c, it in kms.candidates[nid]:
+                for p in self.allowed_pes[nid]:
+                    v = cnf.new_var()
+                    var_of[(nid, p, c, it)] = v
+                    info[v] = Lit(nid, p, c, it)
+                    lits.append(v)
+                    by_slot.setdefault((p, c), []).append(v)
+            by_node[nid] = lits
+
+        n_c1 = cnf.n_clauses
+        # C1: exactly one literal per node (Eq. 1)
+        for nid, lits in by_node.items():
+            if not lits:
+                # node has no legal position at this II -> trivially UNSAT
+                cnf.add_clause([])
+                continue
+            cnf.exactly_one(lits, self.amo)
+        n_c1 = cnf.n_clauses - n_c1
+
+        n_c2 = cnf.n_clauses
+        # C2: at most one node per (PE, kernel cycle) (Eq. 2)
+        for (p, c), lits in by_slot.items():
+            cnf.at_most_one(lits, self.amo)
+        n_c2 = cnf.n_clauses - n_c2
+
+        n_c3 = cnf.n_clauses
+        # C3: per-edge implication clauses (Eq. 3/4/5 window)
+        for src, dst, delta in dfg.edges():
+            lo = 1 - delta * ii
+            hi = (1 - delta) * ii
+            # index src literals by (c, it) for the scan below
+            src_cands = kms.candidates[src]
+            src_pes = self.allowed_pes[src]
+            for cd, itd in kms.candidates[dst]:
+                td = kms.flat_time(cd, itd)
+                ok_times = [(cs, its) for cs, its in src_cands
+                            if lo <= td - kms.flat_time(cs, its) <= hi]
+                for pd in self.allowed_pes[dst]:
+                    w = var_of[(dst, pd, cd, itd)]
+                    support = [var_of[(src, ps, cs, its)]
+                               for cs, its in ok_times
+                               for ps in src_pes
+                               if cgra.reachable(ps, pd)]
+                    cnf.add_clause([-w] + support)
+        n_c3 = cnf.n_clauses - n_c3
+
+        enc = Encoding(cnf=cnf, kms=kms, cgra=cgra, dfg=dfg,
+                       var_of=var_of, info=info)
+        enc.stats = {"vars": cnf.n_vars, "clauses": cnf.n_clauses,
+                     "c1": n_c1, "c2": n_c2, "c3": n_c3}
+        return enc
+
+
+def encode(dfg: DFG, cgra: CGRA, ii: int, amo: str = "pairwise") -> Encoding:
+    return EncoderSession(dfg, cgra, amo).encode(ii)

@@ -1,0 +1,173 @@
+"""jaxpr -> DFG frontend.
+
+The paper extracts loop DFGs from LLVM IR via a custom pass. The JAX-native
+equivalent: trace a scalar loop body written in JAX, convert its jaxpr to a
+DFG. Loop-carried state becomes distance-1 back-edges; the induction
+variable is the first argument.
+
+    def body(i, acc):
+        x = i * 3 + acc
+        return (x ^ (x >> 2),)
+
+    dfg = trace_loop_body(body, n_carry=1)
+
+The resulting DFG is executable (DFG.execute), so a mapping produced by
+SAT-MapIt for it is validated against the traced function itself. Memory
+ops are modelled as extra per-iteration inputs/outputs (`loads=k` appends k
+load nodes passed after the carries; returned extra values become stores).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dfg import DFG
+
+_PRIM_MAP = {
+    "add": "add", "sub": "sub", "mul": "mul",
+    "max": "max", "min": "min",
+    "and": "and", "or": "or", "xor": "xor",
+    "shift_left": "shl",
+    "shift_right_logical": "shr",
+    "shift_right_arithmetic": "shr",
+    "rem": "rem", "div": "div",
+    "lt": "lt", "le": "le", "eq": "eq", "ne": "ne",
+    "gt": "lt", "ge": "le",  # operands swapped below
+}
+_ALIAS_PRIMS = {"convert_element_type", "stop_gradient", "copy",
+                "broadcast_in_dim", "squeeze", "reshape"}
+
+
+def trace_loop_body(fn: Callable, n_carry: int = 0, loads: int = 0,
+                    name: str = "jax_loop") -> Tuple[DFG, Dict[int, int]]:
+    """Trace ``fn(i, *carries, *loaded)`` into a DFG.
+
+    Returns (dfg, carry_map) where carry_map maps carry index -> node id of
+    the value that feeds the next iteration (useful for simulation init).
+    """
+    args = [jnp.int32(0)] * (1 + n_carry + loads)
+    closed = jax.make_jaxpr(fn)(*args)
+    jaxpr = closed.jaxpr
+    g = DFG(name)
+    env: Dict[object, int] = {}
+    consts: Dict[int, int] = {}
+
+    def const_node(val: int) -> int:
+        v = int(val)
+        if v not in consts:
+            consts[v] = g.add("const", imm=v, name=f"c{v}")
+        return consts[v]
+
+    # inputs: induction variable, carried values, loads
+    iv = g.add("iv", name="i")
+    env[id(jaxpr.invars[0])] = iv
+    carry_vars = jaxpr.invars[1:1 + n_carry]
+    pending_carry_uses: List[Tuple[int, int, int]] = []  # (node, slot, carry_ix)
+    for ci, var in enumerate(carry_vars):
+        env[id(var)] = -(ci + 1)  # sentinel, patched after outputs known
+    for li, var in enumerate(jaxpr.invars[1 + n_carry:]):
+        env[id(var)] = g.add("load", [(iv, 0)], imm=100 * (li + 1),
+                             name=f"ld{li}")
+
+    def read(atom) -> int:
+        if hasattr(atom, "val"):  # Literal
+            return const_node(atom.val)
+        return env[id(atom)]
+
+    def process(eqns) -> None:
+        for eqn in eqns:
+            prim = eqn.primitive.name
+            if prim in _ALIAS_PRIMS:
+                env[id(eqn.outvars[0])] = read(eqn.invars[0])
+                continue
+            if prim in ("pjit", "jit", "closed_call", "custom_jvp_call",
+                        "custom_vjp_call"):
+                inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                if getattr(inner, "consts", None):
+                    for cv, cval in zip(ij.constvars, inner.consts):
+                        env[id(cv)] = const_node(int(cval))
+                for iv, atom in zip(ij.invars, eqn.invars):
+                    env[id(iv)] = read(atom)
+                process(ij.eqns)
+                for ov, iov in zip(eqn.outvars, ij.outvars):
+                    env[id(ov)] = read(iov)
+                continue
+            if prim == "select_n":
+                # select_n(pred, case0, case1): pred==1 -> case1
+                c, a0, a1 = (read(x) for x in eqn.invars)
+                ins = [(c, 0), (a1, 0), (a0, 0)]
+                nid = _add_patched(g, "select", ins, pending_carry_uses)
+            elif prim in ("gt", "ge"):
+                a, b = (read(x) for x in eqn.invars)
+                nid = _add_patched(g, _PRIM_MAP[prim], [(b, 0), (a, 0)],
+                                   pending_carry_uses)
+            elif prim in _PRIM_MAP:
+                ins = [(read(x), 0) for x in eqn.invars]
+                nid = _add_patched(g, _PRIM_MAP[prim], ins,
+                                   pending_carry_uses)
+            elif prim == "integer_pow":
+                a = read(eqn.invars[0])
+                p = eqn.params["y"]
+                nid = a
+                for _ in range(p - 1):
+                    nid = _add_patched(g, "mul", [(nid, 0), (a, 0)],
+                                       pending_carry_uses)
+            elif prim == "neg":
+                nid = _add_patched(g, "neg", [(read(eqn.invars[0]), 0)],
+                                   pending_carry_uses)
+            elif prim == "not":
+                nid = _add_patched(g, "not", [(read(eqn.invars[0]), 0)],
+                                   pending_carry_uses)
+            else:
+                raise NotImplementedError(
+                    f"primitive {prim!r} has no CGRA mapping (scalar loop "
+                    f"bodies only; matmul-shaped compute is not a modulo-"
+                    f"scheduling target)")
+            env[id(eqn.outvars[0])] = nid
+
+    process(jaxpr.eqns)
+
+    # outputs: first n_carry are next-iteration carries, rest are stores
+    out_nodes: List[int] = []
+    for var in jaxpr.outvars:
+        nid = read(var)
+        out_nodes.append(nid)
+    carry_map: Dict[int, int] = {}
+    for ci in range(n_carry):
+        src = out_nodes[ci]
+        if src < 0:  # pass-through carry: route it
+            src = g.add("route", [(iv, 0)], name=f"carry{ci}_rt")
+        carry_map[ci] = src
+    # patch carried uses with distance-1 back-edges
+    for nid, slot, sentinel in pending_carry_uses:
+        ci = -sentinel - 1
+        ins = list(g.nodes[nid].ins)
+        ins[slot] = (carry_map[ci], 1)
+        g.nodes[nid].ins = tuple(ins)
+    # stores for non-carry outputs
+    for si, nid in enumerate(out_nodes[n_carry:]):
+        if nid < 0:
+            nid = carry_map[-nid - 1]
+        g.add("store", [(iv, 0), (nid, 0)], imm=1000 * (si + 1),
+              name=f"st{si}")
+    g.validate()
+    return g, carry_map
+
+
+def _add_patched(g: DFG, op: str, ins, pending) -> int:
+    """g.add that tolerates carry sentinels (negative ids) in ins."""
+    clean = []
+    patches = []
+    for slot, (src, dist) in enumerate(ins):
+        if src < 0:
+            patches.append((slot, src))
+            clean.append((0, 0))  # temporary: node 0 always exists (iv)
+        else:
+            clean.append((src, dist))
+    nid = g.add(op, clean)
+    for slot, sentinel in patches:
+        pending.append((nid, slot, sentinel))
+    return nid

@@ -1,0 +1,48 @@
+"""SAT solver backends.
+
+``solve(cnf, method=...)`` dispatches to:
+  * "cdcl"    — our own CDCL (watched literals, VSIDS, Luby restarts,
+                phase saving). Always available; host CPU.
+  * "z3"      — Z3 (the paper's solver), when importable.
+  * "walksat" — batched probSAT in JAX (TPU-native portfolio path);
+                incomplete: returns UNKNOWN instead of UNSAT.
+  * "auto"    — z3 if available else cdcl.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from ..cnf import CNF
+
+SAT, UNSAT, UNKNOWN = "SAT", "UNSAT", "UNKNOWN"
+
+
+def solve(cnf: CNF, method: str = "auto", *, max_conflicts: Optional[int] = None,
+          phase_hint: Optional[List[bool]] = None, seed: int = 0,
+          walksat_steps: int = 20000, walksat_batch: int = 64,
+          ) -> Tuple[str, Optional[List[bool]]]:
+    if method == "auto":
+        method = "z3" if _has_z3() else "cdcl"
+    if method == "z3":
+        from .z3_backend import solve_z3
+        return solve_z3(cnf)
+    if method == "cdcl":
+        from .cdcl import CDCLSolver
+        return CDCLSolver(cnf).solve(max_conflicts=max_conflicts,
+                                     phase_hint=phase_hint)
+    if method == "walksat":
+        from .walksat_jax import solve_walksat
+        return solve_walksat(cnf, seed=seed, steps=walksat_steps,
+                             batch=walksat_batch)
+    if method == "portfolio":
+        from .portfolio import solve_portfolio
+        return solve_portfolio(cnf, seed=seed)
+    raise ValueError(f"unknown SAT method {method!r}")
+
+
+def _has_z3() -> bool:
+    try:
+        import z3  # noqa: F401
+        return True
+    except ImportError:
+        return False

@@ -1,0 +1,248 @@
+"""Conflict-driven clause learning SAT solver.
+
+A dependency-free CDCL so the framework never requires Z3: two-watched
+literals, EVSIDS branching, phase saving, 1UIP learning, Luby restarts.
+Literals are signed ints (DIMACS). Designed for the KMS instances this
+framework produces (1e4–1e5 vars, 1e5–1e6 clauses) — pure Python, so Z3 is
+preferred when present; this backend is the always-available fallback and
+the reference for the JAX portfolio's UNSAT certification.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from ..cnf import CNF
+
+
+def _luby(x: int) -> int:
+    """Luby sequence, 0-based index (MiniSat's iterative formulation)."""
+    size, seq = 1, 0
+    while size < x + 1:
+        seq += 1
+        size = 2 * size + 1
+    while size - 1 != x:
+        size = (size - 1) // 2
+        seq -= 1
+        x %= size
+    return 1 << seq
+
+
+class CDCLSolver:
+    def __init__(self, cnf: CNF):
+        self.nv = cnf.n_vars
+        self.clauses: List[List[int]] = []
+        self.watches: Dict[int, List[int]] = {}
+        # assignment: 0 unassigned, 1 true, -1 false (index = var)
+        self.assign = [0] * (self.nv + 1)
+        self.level = [0] * (self.nv + 1)
+        self.reason: List[Optional[int]] = [None] * (self.nv + 1)
+        self.trail: List[int] = []          # assigned literals in order
+        self.trail_lim: List[int] = []      # decision-level boundaries
+        self.qhead = 0
+        self.activity = [0.0] * (self.nv + 1)
+        self.var_inc = 1.0
+        self.saved_phase = [False] * (self.nv + 1)
+        self.ok = True
+        self._units: List[int] = []
+        for cl in cnf.clauses:
+            if not self._add_clause(list(cl)):
+                self.ok = False
+                break
+
+    # ------------------------------------------------------------ plumbing
+    def _value(self, lit: int) -> int:
+        v = self.assign[abs(lit)]
+        return v if lit > 0 else -v
+
+    def _watch(self, lit: int, ci: int) -> None:
+        self.watches.setdefault(lit, []).append(ci)
+
+    def _add_clause(self, lits: List[int]) -> bool:
+        lits = sorted(set(lits), key=abs)
+        # tautology / dedup
+        for i in range(len(lits) - 1):
+            if lits[i] == -lits[i + 1]:
+                return True
+        if not lits:
+            return False
+        if len(lits) == 1:
+            self._units.append(lits[0])
+            return True
+        ci = len(self.clauses)
+        self.clauses.append(lits)
+        self._watch(lits[0], ci)
+        self._watch(lits[1], ci)
+        return True
+
+    def _enqueue(self, lit: int, reason: Optional[int]) -> bool:
+        val = self._value(lit)
+        if val == 1:
+            return True
+        if val == -1:
+            return False
+        v = abs(lit)
+        self.assign[v] = 1 if lit > 0 else -1
+        self.level[v] = len(self.trail_lim)
+        self.reason[v] = reason
+        self.saved_phase[v] = lit > 0
+        self.trail.append(lit)
+        return True
+
+    def _propagate(self) -> Optional[int]:
+        """Returns conflicting clause index or None."""
+        while self.qhead < len(self.trail):
+            lit = self.trail[self.qhead]
+            self.qhead += 1
+            falsified = -lit
+            wl = self.watches.get(falsified)
+            if not wl:
+                continue
+            keep: List[int] = []
+            i = 0
+            while i < len(wl):
+                ci = wl[i]
+                i += 1
+                cl = self.clauses[ci]
+                # ensure falsified is cl position 1
+                if cl[0] == falsified:
+                    cl[0], cl[1] = cl[1], cl[0]
+                first = cl[0]
+                if self._value(first) == 1:
+                    keep.append(ci)
+                    continue
+                # search replacement watch
+                moved = False
+                for k in range(2, len(cl)):
+                    if self._value(cl[k]) != -1:
+                        cl[1], cl[k] = cl[k], cl[1]
+                        self._watch(cl[1], ci)
+                        moved = True
+                        break
+                if moved:
+                    continue
+                keep.append(ci)
+                if self._value(first) == -1:
+                    keep.extend(wl[i:])
+                    self.watches[falsified] = keep
+                    return ci
+                self._enqueue(first, ci)
+            self.watches[falsified] = keep
+        return None
+
+    # -------------------------------------------------------------- branch
+    def _bump(self, v: int) -> None:
+        self.activity[v] += self.var_inc
+        if self.activity[v] > 1e100:
+            for u in range(1, self.nv + 1):
+                self.activity[u] *= 1e-100
+            self.var_inc *= 1e-100
+
+    def _decide(self) -> int:
+        best, bestv = -1.0, 0
+        for v in range(1, self.nv + 1):
+            if self.assign[v] == 0 and self.activity[v] > best:
+                best, bestv = self.activity[v], v
+        return bestv
+
+    def _analyze(self, confl: int) -> Tuple[List[int], int]:
+        learnt = [0]  # slot for the asserting literal
+        seen = [False] * (self.nv + 1)
+        counter = 0
+        lit = 0
+        idx = len(self.trail) - 1
+        cur_level = len(self.trail_lim)
+        ci: Optional[int] = confl
+        first = True
+        while True:
+            cl = self.clauses[ci]
+            start = 0 if first else 1
+            # for reason clauses, cl[0] is the propagated literal
+            for q in (cl if first else cl[1:] if cl[0] == lit else
+                      [x for x in cl if x != lit]):
+                v = abs(q)
+                if not seen[v] and self.level[v] > 0:
+                    seen[v] = True
+                    self._bump(v)
+                    if self.level[v] >= cur_level:
+                        counter += 1
+                    else:
+                        learnt.append(q)
+            first = False
+            # walk back the trail to the next marked literal
+            while not seen[abs(self.trail[idx])]:
+                idx -= 1
+            lit = self.trail[idx]
+            v = abs(lit)
+            seen[v] = False
+            counter -= 1
+            idx -= 1
+            if counter == 0:
+                break
+            ci = self.reason[v]
+        learnt[0] = -lit
+        if len(learnt) == 1:
+            bt = 0
+        else:
+            bt = max(self.level[abs(q)] for q in learnt[1:])
+        return learnt, bt
+
+    def _backtrack(self, lvl: int) -> None:
+        if len(self.trail_lim) <= lvl:
+            return
+        lim = self.trail_lim[lvl]
+        for lit in reversed(self.trail[lim:]):
+            self.assign[abs(lit)] = 0
+        del self.trail[lim:]
+        del self.trail_lim[lvl:]
+        self.qhead = min(self.qhead, len(self.trail))
+
+    # ---------------------------------------------------------------- main
+    def solve(self, max_conflicts: Optional[int] = None,
+              phase_hint: Optional[List[bool]] = None,
+              ) -> Tuple[str, Optional[List[bool]]]:
+        from . import SAT, UNSAT, UNKNOWN
+        if not self.ok:
+            return UNSAT, None
+        if phase_hint:
+            for v in range(1, min(self.nv, len(phase_hint)) + 1):
+                self.saved_phase[v] = bool(phase_hint[v - 1])
+        for u in self._units:
+            if not self._enqueue(u, None):
+                return UNSAT, None
+        if self._propagate() is not None:
+            return UNSAT, None
+        conflicts = 0
+        restart_idx = 1
+        budget = 100 * _luby(restart_idx)
+        while True:
+            confl = self._propagate()
+            if confl is not None:
+                conflicts += 1
+                if len(self.trail_lim) == 0:
+                    return UNSAT, None
+                learnt, bt = self._analyze(confl)
+                self._backtrack(bt)
+                if len(learnt) == 1:
+                    if not self._enqueue(learnt[0], None):
+                        return UNSAT, None
+                else:
+                    ci = len(self.clauses)
+                    self.clauses.append(learnt)
+                    self._watch(learnt[0], ci)
+                    self._watch(learnt[1], ci)
+                    self._enqueue(learnt[0], ci)
+                self.var_inc *= 1.0 / 0.95
+                if max_conflicts is not None and conflicts >= max_conflicts:
+                    return UNKNOWN, None
+                if conflicts >= budget:
+                    restart_idx += 1
+                    budget = conflicts + 100 * _luby(restart_idx)
+                    self._backtrack(0)
+            else:
+                v = self._decide()
+                if v == 0:
+                    model = [self.assign[u] == 1 for u in range(1, self.nv + 1)]
+                    return SAT, model
+                self.trail_lim.append(len(self.trail))
+                lit = v if self.saved_phase[v] else -v
+                self._enqueue(lit, None)

@@ -1,0 +1,163 @@
+"""Batched probSAT/WalkSAT in JAX — the TPU-native mapper search path.
+
+The KMS CNF is lowered to dense padded tensors; a *batch* of candidate
+assignments walks in parallel (one probSAT chain per batch row), so clause
+evaluation becomes regular tensor work that the VPU/MXU executes well. On a
+pod the batch is sharded over the mesh with shard_map (see portfolio.py);
+the first chain to satisfy the formula wins.
+
+This solver is incomplete: it can certify SAT but returns UNKNOWN instead of
+UNSAT — the Fig. 3 loop then falls back to CDCL/Z3 for the UNSAT proof.
+
+``pack_cnf``/``true_counts_ref`` are also the reference oracle for the
+``kernels/clause_eval`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..cnf import CNF
+
+
+class PackedCNF(NamedTuple):
+    cvars: jnp.ndarray   # [C, Lmax] int32 var ids (1-based), 0 = padding
+    csign: jnp.ndarray   # [C, Lmax] bool, True = positive literal
+    ovars: jnp.ndarray   # [V+1, Omax] int32 clause ids (0-based), -1 = padding
+    osign: jnp.ndarray   # [V+1, Omax] bool sign of the var in that clause
+    n_vars: int
+    n_clauses: int
+
+
+def pack_cnf(cnf: CNF) -> PackedCNF:
+    lmax = max((len(c) for c in cnf.clauses), default=1)
+    C = cnf.n_clauses
+    cvars = np.zeros((C, lmax), np.int32)
+    csign = np.zeros((C, lmax), bool)
+    occ: List[List[Tuple[int, bool]]] = [[] for _ in range(cnf.n_vars + 1)]
+    for ci, cl in enumerate(cnf.clauses):
+        for j, lit in enumerate(cl):
+            v = abs(lit)
+            cvars[ci, j] = v
+            csign[ci, j] = lit > 0
+            occ[v].append((ci, lit > 0))
+    omax = max((len(o) for o in occ), default=1)
+    ovars = np.full((cnf.n_vars + 1, omax), -1, np.int32)
+    osign = np.zeros((cnf.n_vars + 1, omax), bool)
+    for v, lst in enumerate(occ):
+        for j, (ci, s) in enumerate(lst):
+            ovars[v, j] = ci
+            osign[v, j] = s
+    return PackedCNF(jnp.asarray(cvars), jnp.asarray(csign),
+                     jnp.asarray(ovars), jnp.asarray(osign),
+                     cnf.n_vars, C)
+
+
+def true_counts_ref(packed: PackedCNF, assign: jnp.ndarray) -> jnp.ndarray:
+    """Per-clause count of satisfied literals. assign: [V+1] bool -> [C] int32.
+
+    Pure-jnp oracle; the Pallas ``clause_eval`` kernel computes the same
+    quantity blockwise (see repro.kernels.clause_eval).
+    """
+    mask = packed.cvars > 0
+    vals = assign[packed.cvars] == packed.csign
+    return jnp.sum(jnp.where(mask, vals, False), axis=-1).astype(jnp.int32)
+
+
+def true_counts_batch(packed: PackedCNF, assign: jnp.ndarray,
+                      use_kernel: bool | None = None) -> jnp.ndarray:
+    """Batched per-clause true counts [B, C]; routes to the Pallas
+    clause_eval kernel on TPU (VMEM-tiled), jnp oracle elsewhere."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from ...kernels.clause_eval import true_counts as tc_kernel
+        return tc_kernel(packed.cvars, packed.csign.astype(bool), assign)
+    return jax.vmap(lambda a: true_counts_ref(packed, a))(assign)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _run_chains(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
+                steps: int, cb: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """probSAT chains. assign0: [B, V+1] bool. Returns (solved [B], assign)."""
+
+    def clause_sat(assign):                       # [V+1] -> [C] int32
+        return true_counts_ref(packed, assign)
+
+    def step(carry, _):
+        assign, tc, key = carry                   # [B,V+1], [B,C]
+        unsat = tc == 0                           # [B, C]
+        any_unsat = jnp.any(unsat, axis=-1)       # [B]
+        key, k1, k2 = jax.random.split(key, 3)
+        # pick a random unsat clause per chain
+        logits = jnp.where(unsat, 0.0, -1e30)
+        cidx = jax.random.categorical(k1, logits, axis=-1)      # [B]
+        vs = packed.cvars[cidx]                   # [B, Lmax]
+        vmask = vs > 0
+        # break count per candidate var: clauses where v is the sole support
+        occ_c = packed.ovars[vs]                  # [B, Lmax, Omax]
+        occ_s = packed.osign[vs]
+        occ_valid = occ_c >= 0
+        occ_cc = jnp.where(occ_valid, occ_c, 0)
+        flat = occ_cc.reshape(occ_cc.shape[0], -1)              # [B, L*O]
+        tc_at = jnp.take_along_axis(tc, flat, axis=-1).reshape(occ_c.shape)
+        a_at = jnp.take_along_axis(assign, vs, axis=-1)         # [B, Lmax]
+        supports = occ_s == a_at[..., None]       # var currently satisfies c'
+        brk = jnp.sum(occ_valid & supports & (tc_at == 1), axis=-1)  # [B,Lmax]
+        # probSAT polynomial heuristic: p ∝ (1 + brk)^-cb
+        w = jnp.where(vmask, -cb * jnp.log1p(brk.astype(jnp.float32)), -1e30)
+        pick = jax.random.categorical(k2, w, axis=-1)           # [B]
+        v_flip = jnp.take_along_axis(vs, pick[:, None], axis=-1)[:, 0]
+        v_flip = jnp.where(any_unsat, v_flip, 0)  # flip dummy var 0 if solved
+        # apply flip + incremental true-count update via occurrence lists
+        new_val = ~jnp.take_along_axis(assign, v_flip[:, None], axis=-1)[:, 0]
+        assign = assign.at[jnp.arange(assign.shape[0]), v_flip].set(new_val)
+        occ_cf = packed.ovars[v_flip]             # [B, Omax]
+        occ_sf = packed.osign[v_flip]
+        validf = occ_cf >= 0
+        delta = jnp.where(occ_sf == new_val[:, None], 1, -1)
+        delta = jnp.where(validf, delta, 0)
+        tc = tc + jnp.zeros_like(tc).at[
+            jnp.arange(tc.shape[0])[:, None], jnp.where(validf, occ_cf, 0)
+        ].add(delta)
+        return (assign, tc, key), None
+
+    tc0 = jax.vmap(clause_sat)(assign0)
+    (assign, tc, _), _ = jax.lax.scan(step, (assign0, tc0, key), None,
+                                      length=steps)
+    solved = ~jnp.any(tc == 0, axis=-1)
+    return solved, assign
+
+
+def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
+                  batch: int = 64, cb: float = 2.3,
+                  ) -> Tuple[str, Optional[List[bool]]]:
+    from . import SAT, UNKNOWN, UNSAT
+    if any(len(c) == 0 for c in cnf.clauses):
+        return UNSAT, None
+    if cnf.n_clauses == 0 or cnf.n_vars == 0:
+        return SAT, [False] * cnf.n_vars
+    packed = pack_cnf(cnf)
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    assign0 = jax.random.bernoulli(k0, 0.5, (batch, cnf.n_vars + 1))
+    # chunk the walk so we can stop early once a chain solves
+    chunk = max(256, min(steps, 2048))
+    done = 0
+    while done < steps:
+        key, kc = jax.random.split(key)
+        solved, assign = _run_chains(packed, assign0, kc, chunk, cb)
+        solved = np.asarray(solved)
+        if solved.any():
+            row = int(np.argmax(solved))
+            model = np.asarray(assign[row])[1:].tolist()
+            assert cnf.check(model), "walksat returned a non-model"
+            return SAT, [bool(b) for b in model]
+        assign0 = assign
+        done += chunk
+    return UNKNOWN, None

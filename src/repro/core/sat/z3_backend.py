@@ -1,0 +1,29 @@
+"""Z3 backend — the solver used in the paper's own experiments."""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from ..cnf import CNF
+
+
+def solve_z3(cnf: CNF, timeout_ms: Optional[int] = None,
+             ) -> Tuple[str, Optional[List[bool]]]:
+    import z3
+    from . import SAT, UNSAT, UNKNOWN
+
+    s = z3.Solver()
+    if timeout_ms:
+        s.set("timeout", timeout_ms)
+    xs = [z3.Bool(f"x{v}") for v in range(cnf.n_vars + 1)]  # xs[0] unused
+    for cl in cnf.clauses:
+        if not cl:
+            return UNSAT, None
+        s.add(z3.Or(*[xs[l] if l > 0 else z3.Not(xs[-l]) for l in cl]))
+    res = s.check()
+    if res == z3.sat:
+        m = s.model()
+        model = [z3.is_true(m[xs[v]]) for v in range(1, cnf.n_vars + 1)]
+        return SAT, model
+    if res == z3.unsat:
+        return UNSAT, None
+    return UNKNOWN, None

@@ -1,0 +1,114 @@
+"""ASAP / ALAP / Mobility Schedule / Kernel Mobility Schedule (paper §IV-B).
+
+The KMS is the paper's custom structure: the Mobility Schedule folded by II.
+A node whose mobility window is [asap, alap] has one KMS *candidate* per time
+slot t in that window, encoded as (cycle = t mod II, iteration = t // II).
+The KMS is "a superset of all possible kernels".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import networkx as nx
+
+from .cgra import CGRA
+from .dfg import DFG
+
+
+def asap_alap(dfg: DFG) -> Tuple[Dict[int, int], Dict[int, int], int]:
+    """Forward-edge (distance-0) ASAP/ALAP with unit latencies (paper Fig. 4).
+
+    Returns (asap, alap, schedule_length L). ALAP is relative to the critical
+    path length, i.e. sinks sit at L-1.
+    """
+    order = dfg.topo_order()
+    asap = {nid: 0 for nid in order}
+    for nid in order:
+        for src in dfg.preds(nid):
+            asap[nid] = max(asap[nid], asap[src] + 1)
+    length = max(asap.values()) + 1 if asap else 0
+    alap = {nid: length - 1 for nid in order}
+    for nid in reversed(order):
+        for dst in dfg.succs(nid):
+            alap[nid] = min(alap[nid], alap[dst] - 1)
+    return asap, alap, length
+
+
+def res_mii(dfg: DFG, cgra: CGRA) -> int:
+    mii = math.ceil(dfg.n / cgra.n_pes)
+    n_mem = sum(1 for nd in dfg.nodes.values() if nd.is_mem)
+    n_mem_pes = cgra.n_pes if cgra.mem_pes is None else len(cgra.mem_pes)
+    if n_mem:
+        mii = max(mii, math.ceil(n_mem / max(n_mem_pes, 1)))
+    return max(mii, 1)
+
+
+def rec_mii(dfg: DFG) -> int:
+    """max over dependency cycles of ceil(latency / distance)."""
+    g = nx.DiGraph()
+    g.add_nodes_from(dfg.nodes)
+    dist: Dict[Tuple[int, int], int] = {}
+    for s, d, dd in dfg.edges():
+        key = (s, d)
+        if key in dist:
+            dist[key] = min(dist[key], dd)
+        else:
+            dist[key] = dd
+        g.add_edge(s, d)
+    best = 1
+    for cyc in nx.simple_cycles(g):
+        latency = len(cyc)  # unit latency per node
+        distance = sum(dist[(cyc[i], cyc[(i + 1) % len(cyc)])]
+                       for i in range(len(cyc)))
+        if distance > 0:
+            best = max(best, math.ceil(latency / distance))
+    return best
+
+
+def min_ii(dfg: DFG, cgra: CGRA) -> int:
+    return max(res_mii(dfg, cgra), rec_mii(dfg))
+
+
+@dataclass
+class KMS:
+    """Kernel Mobility Schedule for one candidate II."""
+    ii: int
+    length: int                                  # mobility-schedule length L
+    n_folds: int                                 # ceil(L / II) iterations
+    asap: Dict[int, int]
+    alap: Dict[int, int]
+    # node -> list of candidate (cycle, iteration) pairs, cycle in [0, II)
+    candidates: Dict[int, List[Tuple[int, int]]]
+
+    def flat_time(self, cycle: int, iteration: int) -> int:
+        return iteration * self.ii + cycle
+
+    def rows(self) -> List[List[Tuple[int, int]]]:
+        """KMS rows (paper Fig. 5): row c -> [(node, iteration), ...]."""
+        out: List[List[Tuple[int, int]]] = [[] for _ in range(self.ii)]
+        for nid, cands in self.candidates.items():
+            for c, it in cands:
+                out[c].append((nid, it))
+        for row in out:
+            row.sort()
+        return out
+
+
+def mobility_schedule(dfg: DFG) -> List[List[int]]:
+    """Paper Fig. 4 MS: row t lists nodes whose [asap, alap] window covers t."""
+    asap, alap, length = asap_alap(dfg)
+    return [[nid for nid in sorted(dfg.nodes)
+             if asap[nid] <= t <= alap[nid]] for t in range(length)]
+
+
+def build_kms(dfg: DFG, ii: int) -> KMS:
+    asap, alap, length = asap_alap(dfg)
+    n_folds = max(1, math.ceil(length / ii))
+    cands = {
+        nid: [(t % ii, t // ii) for t in range(asap[nid], alap[nid] + 1)]
+        for nid in dfg.nodes
+    }
+    return KMS(ii=ii, length=length, n_folds=n_folds, asap=asap, alap=alap,
+               candidates=cands)

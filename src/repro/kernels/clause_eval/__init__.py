@@ -1,0 +1,1 @@
+from .ops import true_counts  # noqa: F401

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: batched clause true-count evaluation.
+
+TPU adaptation of the WalkSAT inner loop: the whole assignment vector for a
+block of chains lives in VMEM (V bits is tiny — a 100k-var instance is
+100KB as int8), the clause-literal table streams through VMEM in [block_c,
+Lmax] tiles, and each grid cell evaluates a [block_b x block_c] tile of the
+(chain, clause) matrix with a vectorized gather. Grid dims are fully
+parallel — clause tiles are independent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _clause_eval_kernel(assign_ref, cvars_ref, csign_ref, out_ref):
+    a = assign_ref[...]                      # [bB, V+1] int8
+    cv = cvars_ref[...]                      # [bC, L] int32
+    cs = csign_ref[...]                      # [bC, L] int8
+    bb = a.shape[0]
+    bc, ll = cv.shape
+    flat = cv.reshape(-1)                    # [bC*L]
+    vals = jnp.take(a, flat, axis=1).reshape(bb, bc, ll)
+    sat = (vals == cs[None]) & (cv[None] > 0)
+    out_ref[...] = jnp.sum(sat, axis=-1, dtype=jnp.int32)
+
+
+def clause_eval_pallas(assign: jnp.ndarray, cvars: jnp.ndarray,
+                       csign: jnp.ndarray, *, block_b: int = 8,
+                       block_c: int = 1024, interpret: bool = False,
+                       ) -> jnp.ndarray:
+    """assign: [B, V+1] int8 (0/1); cvars: [C, L] int32; csign: [C, L] int8.
+    Returns tc [B, C] int32. B % block_b == 0 and C % block_c == 0
+    (ops.true_counts pads)."""
+    b, v1 = assign.shape
+    c, l = cvars.shape
+    grid = (b // block_b, c // block_c)
+    return pl.pallas_call(
+        _clause_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, v1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_c, l), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        interpret=interpret,
+    )(assign, cvars, csign)

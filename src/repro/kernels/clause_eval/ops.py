@@ -1,0 +1,42 @@
+"""jit'd public wrapper: padding + backend dispatch for clause_eval."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import clause_eval_pallas
+from .ref import true_counts_ref
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c",
+                                             "interpret"))
+def true_counts(cvars: jnp.ndarray, csign: jnp.ndarray, assign: jnp.ndarray,
+                *, block_b: int = 8, block_c: int = 1024,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Batched per-clause true counts. cvars [C,L] int32 (0-padded, 1-based);
+    csign [C,L] bool; assign [B,V+1] bool -> [B,C] int32.
+
+    On non-TPU backends the kernel runs in interpret mode (same code path,
+    Python evaluation) unless ``interpret=False`` forces compilation.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, v1 = assign.shape
+    c, l = cvars.shape
+    bp = _pad_to(max(b, 1), block_b)
+    cp = _pad_to(max(c, 1), block_c)
+    a8 = jnp.pad(assign.astype(jnp.int8), ((0, bp - b), (0, 0)))
+    cv = jnp.pad(cvars, ((0, cp - c), (0, 0)))
+    cs = jnp.pad(csign.astype(jnp.int8), ((0, cp - c), (0, 0)))
+    tc = clause_eval_pallas(a8, cv, cs, block_b=block_b, block_c=block_c,
+                            interpret=interpret)
+    return tc[:b, :c]
+
+
+__all__ = ["true_counts", "true_counts_ref"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for clause evaluation.
+
+tc[b, c] = number of literals of clause c satisfied by assignment b.
+A clause is UNSAT under the assignment iff tc == 0 — the quantity the
+WalkSAT portfolio evaluates for every chain every step (the mapper's
+accelerator hot spot).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def true_counts_ref(cvars: jnp.ndarray, csign: jnp.ndarray,
+                    assign: jnp.ndarray) -> jnp.ndarray:
+    """cvars: [C, L] int32 (1-based var ids, 0 = padding);
+    csign: [C, L] bool; assign: [B, V+1] bool. Returns [B, C] int32."""
+    mask = cvars > 0                                   # [C, L]
+    vals = assign[:, cvars]                            # [B, C, L]
+    sat = jnp.where(mask[None], vals == csign[None], False)
+    return jnp.sum(sat, axis=-1).astype(jnp.int32)

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for flash attention: padding + backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """Flash attention, kernel layout [B, H, S, D]; pads S to block
+    multiples and strips afterwards. GQA via Hq % Hkv == 0."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    sqp, skp = _pad_to(sq, block_q), _pad_to(sk, block_k)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+        sk_valid=sk, block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :, :sq, :]
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_pallas
+from .ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A_log, B, C, D, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Chunked SSD scan. x: [b,s,h,p]; dt: [b,s,h] (post-softplus);
+    A_log: [h]; B, C: [b,s,n]; D: [h]. Pads s to a chunk multiple
+    (dt=0 padding is a no-op for both state and output)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    sp = ((s + chunk - 1) // chunk) * chunk
+    pad = sp - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_pallas(x, dt, A_log, B, C, D, chunk=chunk,
+                        interpret=interpret)
+    return y[:, :s]
+
+
+__all__ = ["ssd_scan", "ssd_ref"]

@@ -1,0 +1,40 @@
+"""Sequential-recurrence oracle for the Mamba2 SSD scan.
+
+The strongest possible reference: the literal per-step recurrence
+
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t^T S_t + D * x_t
+
+It independently validates BOTH the Pallas chunked kernel and the jnp
+chunked dual form in repro.models.layers.ssd_chunked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A_log: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray) -> jnp.ndarray:
+    """x: [b,s,h,p]; dt: [b,s,h] (already softplus-ed); A_log: [h];
+    B, C: [b,s,n]; D: [h]. Returns y: [b,s,h,p] (float32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                    # [b,h,p], [b,h], [b,n], [b,n]
+        dA = jnp.exp(dtt * A[None, :])           # [b,h]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (x.astype(jnp.float32).swapaxes(0, 1),
+          dt.astype(jnp.float32).swapaxes(0, 1),
+          B.astype(jnp.float32).swapaxes(0, 1),
+          C.astype(jnp.float32).swapaxes(0, 1))
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, init, xs)
+    y = ys.swapaxes(0, 1)                        # [b,s,h,p]
+    return y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]

@@ -1,0 +1,73 @@
+"""Per-architecture CGRA offload report (DESIGN.md §4).
+
+    PYTHONPATH=src python -m repro.launch.map_cgra --arch yi_34b --cgra 4x4
+
+Extracts the architecture's representative scalar inner loops (norm
+accumulation, RoPE rotation, router argmax, SSD recurrence — the loops a
+CGRA sidecar could offload), maps each with SAT-MapIt, and prints II +
+verification per loop. Matmul-shaped compute is intentionally absent: it
+is not a modulo-scheduling target (it goes to the MXU / systolic array).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..core.cgra import cgra_from_name
+from ..core.frontend import trace_loop_body
+from ..core.mapper import MapperConfig, map_loop
+
+
+def _norm_acc(i, acc, x):
+    return (acc + x * x,)
+
+
+def _rope_pair(i, c, s):
+    x1 = (c * 13 - s * 7) >> 4
+    x2 = (c * 7 + s * 13) >> 4
+    return (x1, x2)
+
+
+def _router_argmax(i, best, bestv, x):
+    take = x > bestv
+    return (jnp.where(take, i, best), jnp.where(take, x, bestv))
+
+
+def _ssd_step(i, state, x):
+    decayed = state - (state >> 3)
+    return (decayed + x * 5,)
+
+
+def loops_for(cfg):
+    loops = [("rmsnorm_acc", _norm_acc, 1, 1)]
+    if not cfg.is_attention_free:
+        loops.append(("rope_rotation", _rope_pair, 2, 0))
+    if cfg.n_experts:
+        loops.append(("router_argmax", _router_argmax, 2, 1))
+    if cfg.has_ssm:
+        loops.append(("ssd_recurrence", _ssd_step, 1, 1))
+    return loops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cgra", default="4x4")
+    ap.add_argument("--routing", action="store_true")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    cgra = cgra_from_name(args.cgra)
+    print(f"CGRA offload report: {cfg.name} on {cgra}")
+    for name, fn, n_carry, loads in loops_for(cfg):
+        g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
+        r = map_loop(g, cgra, MapperConfig(
+            solver="auto", timeout_s=60, routing=args.routing))
+        status = f"II={r.ii} (MII={r.mii})" if r.success else "NO MAPPING"
+        print(f"  {name:16s} nodes={g.n:2d}  {status}  "
+              f"[{r.total_time:.2f}s, {len(r.attempts)} attempts]")
+
+
+if __name__ == "__main__":
+    main()

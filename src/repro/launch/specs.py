@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch, shape).
+
+``input_specs`` returns (kind, shapes-pytree, specs-pytree) where the
+pytrees match the step function's batch argument. No device allocation —
+exactly the shannon/kernels dry-run pattern. Modality frontends are stubs:
+audio provides precomputed EnCodec frame embeddings, VLM provides
+precomputed ViT patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.model import LM
+from ..models.sharding import spec
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    shapes: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        shapes["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), _dt(cfg))
+        specs["embeds"] = spec(mesh, "batch", None, None)
+        shapes["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = spec(mesh, "batch", None)
+    elif cfg.frontend == "vision_patches":
+        fl = cfg.frontend_len
+        shapes["embeds"] = jax.ShapeDtypeStruct((b, fl, cfg.d_model), _dt(cfg))
+        specs["embeds"] = spec(mesh, "batch", None, None)
+        shapes["tokens"] = jax.ShapeDtypeStruct((b, s - fl), i32)
+        specs["tokens"] = spec(mesh, "batch", None)
+        shapes["labels"] = jax.ShapeDtypeStruct((b, s - fl), i32)
+        specs["labels"] = spec(mesh, "batch", None)
+    else:
+        shapes["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["tokens"] = spec(mesh, "batch", None)
+        shapes["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = spec(mesh, "batch", None)
+    return shapes, specs
+
+
+def decode_inputs(lm: LM, shape: ShapeConfig, mesh: Mesh):
+    """(cache, tokens, t) shapes+specs for one decode step at position
+    seq_len (KV cache holding seq_len context)."""
+    cfg = lm.cfg
+    b = shape.global_batch
+    window = shape.seq_len
+    if cfg.attn_window:
+        window = min(window, cfg.attn_window)
+    cache_shapes = lm.cache_shapes(b, window) if (
+        not cfg.is_attention_free or cfg.has_ssm) else {}
+    cache_specs = lm.cache_specs(batch=b)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_spec = spec(mesh, "batch", None, batch_size=b)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return (cache_shapes, cache_specs), (tok, tok_spec), (t, P())
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    b, s = shape.global_batch, shape.seq_len
+    shapes: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        shapes["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), _dt(cfg))
+        specs["embeds"] = spec(mesh, "batch", None, None)
+    elif cfg.frontend == "vision_patches":
+        fl = cfg.frontend_len
+        shapes["embeds"] = jax.ShapeDtypeStruct((b, fl, cfg.d_model), _dt(cfg))
+        specs["embeds"] = spec(mesh, "batch", None, None)
+        shapes["tokens"] = jax.ShapeDtypeStruct((b, s - fl), jnp.int32)
+        specs["tokens"] = spec(mesh, "batch", None)
+    else:
+        shapes["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["tokens"] = spec(mesh, "batch", None)
+    return shapes, specs

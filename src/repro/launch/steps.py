@@ -1,0 +1,86 @@
+"""Step-function factories shared by train.py, serve.py and dryrun.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import LM
+from ..optim import adamw
+
+
+def make_train_step(lm: LM, opt_cfg: adamw.AdamWConfig | None = None,
+                    ) -> Callable:
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    # constrain grads to the ZeRO-1 (data-sharded) optimizer-state layout:
+    # the partitioner then emits reduce-scatter of grads over the data axes
+    # instead of full all-reduce + local slice (measured on yi_34b, §Perf)
+    grad_specs = None
+    if lm.cfg.zero1:
+        grad_specs = adamw.state_specs(
+            lm.param_specs(), lm.param_shapes(), lm.mesh, zero1=True)["m"]
+
+    def _grad(params, batch):
+        a = lm.cfg.accum_steps
+        if a <= 1:
+            return jax.value_and_grad(lm.loss_fn, has_aux=True)(params, batch)
+        # microbatch accumulation: scan over A slices of the global batch;
+        # activations exist for one microbatch at a time (A-fold smaller
+        # temps), grads accumulate in f32
+        def slice_batch(i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // a), x.shape[0] // a, axis=0), batch)
+
+        def body(carry, i):
+            acc, loss_sum, aux_sum = carry
+            (loss, metrics), g = jax.value_and_grad(
+                lm.loss_fn, has_aux=True)(params, slice_batch(i))
+            acc = jax.tree.map(
+                lambda s, x: s + x.astype(jnp.float32) / a, acc, g)
+            return (acc, loss_sum + loss / a,
+                    aux_sum + metrics["aux"] / a), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss, aux), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)),
+            jnp.arange(a))
+        return (loss, {"ce": loss, "aux": aux}), grads
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = _grad(params, batch)
+        if lm.cfg.grad_barrier:
+            # keep the DP grad reduction in the grads' own (bf16) dtype:
+            # without the barrier XLA hoists the optimizer's f32 convert
+            # above the all-reduce (2x wire)
+            grads = jax.lax.optimization_barrier(grads)
+        if grad_specs is not None:
+            from jax.sharding import PartitionSpec as P
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_s = jax.tree.leaves(
+                grad_specs, is_leaf=lambda x: isinstance(x, P))
+            grads = treedef.unflatten([
+                jax.lax.with_sharding_constraint(g, sp)
+                for g, sp in zip(flat_g, flat_s)])
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(lm: LM) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch.get("tokens"), batch.get("embeds"))
+    return prefill_step
+
+
+def make_decode_step(lm: LM) -> Callable:
+    def decode_step(params, cache, tokens, t):
+        return lm.decode_step(params, cache, tokens, t)
+    return decode_step

@@ -1,0 +1,484 @@
+"""Model layers: norms, RoPE, blockwise attention, SwiGLU, MoE, SSD.
+
+Everything is written against plain parameter pytrees (no framework) and is
+shape-polymorphic over the mesh: weights carry PartitionSpecs assigned in
+model.py, activations get with_sharding_constraint at block boundaries, and
+XLA's SPMD partitioner inserts the Megatron-style collectives.
+
+Attention is *blockwise* (online-softmax over KV blocks, lax.scan) — the
+same algorithm as the Pallas flash kernel in repro.kernels.flash_attention,
+which replaces it on real TPU hardware; this jnp version is the portable
+path and the kernel's numerical oracle. Naive O(S^2)-memory attention is
+kept for cross-checking (tests) and perf ablation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import AttnPlan
+
+Params = Dict[str, Any]
+_NEG = -2.0 ** 30  # large-negative for masking (safe in bf16/f32)
+
+
+# ----------------------------------------------------------------- basics
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm with a custom VJP that keeps the *cotangent boundary* in the
+    residual dtype (bf16): without it, the f32 upcast inside the norm makes
+    XLA all-reduce residual-stream gradients in f32 — measured 2x collective
+    wire on dense train steps."""
+    return _rmsnorm_fwd(x, w, eps)[0]
+
+
+def _rmsnorm_fwd(x, w, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    y = (xf * r).astype(x.dtype) * w
+    return y, (x, w, r)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    x, w, r = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    xhat = xf * r
+    g = dyf * w.astype(jnp.float32)
+    dw = jnp.sum(dyf * xhat, axis=tuple(range(x.ndim - 1)))
+    dx = r * (g - xhat * jnp.mean(g * xhat, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (int)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------- KV quantization
+def quantize_kv(x: jnp.ndarray):
+    """Symmetric int8 per-(pos, head) quantization over the head_dim axis.
+    x: [..., hd] -> (int8 [..., hd], scale f32 [...])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ------------------------------------------------------------- attention
+def naive_attention(q, k, v, q_pos, k_pos, window: int = 0):
+    """O(S_q*S_k) reference. q: [B,Sq,H,D], k/v: [B,Sk,KV,D]."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, sq, kvh, group, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf)
+    mask = k_pos[:, None, :] <= q_pos[:, :, None]            # causal
+    if window:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None, None, :, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, window: int = 0,
+                        block: int = 512):
+    """Flash-style online-softmax attention over KV blocks (jnp/lax.scan).
+
+    Peak memory O(Sq * block) instead of O(Sq * Sk). Same signature/semantics
+    as naive_attention; this is the oracle mirrored by the Pallas kernel.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    nblk = -(-sk // block)
+    pad = nblk * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    qf = (q.astype(jnp.float32) / math.sqrt(d)).reshape(b, sq, kvh, group, d)
+    kb = k.reshape(b, nblk, block, kvh, d).swapaxes(0, 1)    # [n,B,blk,KV,D]
+    vb = v.reshape(b, nblk, block, kvh, d).swapaxes(0, 1)
+    pb = k_pos.reshape(b, nblk, block).swapaxes(0, 1)        # [n,B,blk]
+
+    def step(carry, blk):
+        m, l, acc = carry                                    # running max/sum
+        kc, vc, pc = blk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kc.astype(jnp.float32))
+        mask = pc[:, None, :] <= q_pos[:, :, None]
+        if window:
+            mask &= pc[:, None, :] > q_pos[:, :, None] - window
+        s = jnp.where(mask[:, None, None, :, :], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, group, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, group, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def attention_layer(cfg: ModelConfig, plan: AttnPlan, p: Params,
+                    x: jnp.ndarray, positions: jnp.ndarray,
+                    cache: Optional[Dict[str, jnp.ndarray]] = None,
+                    window: int = 0, impl: str = "blockwise",
+                    ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x: [B,S,D]. cache: {"k","v": [B,Skv,KV,hd], "pos": [B,Skv]} or ring
+    buffer (see decode path in model.py). Returns (out [B,S,D], new kv)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk",
+                   x, p["wq"].reshape(cfg.d_model, plan.h_pad, hd))
+    k = jnp.einsum("bsd,dhk->bshk",
+                   x, p["wk"].reshape(cfg.d_model, plan.kv_virtual, hd))
+    v = jnp.einsum("bsd,dhk->bshk",
+                   x, p["wv"].reshape(cfg.d_model, plan.kv_virtual, hd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(plan.h_pad, hd)
+        k = k + p["bk"].reshape(plan.kv_virtual, hd)
+        v = v + p["bv"].reshape(plan.kv_virtual, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        kk, vv, kpos = k, v, positions
+    else:
+        # decode: attend over the ring buffer PLUS the current token(s);
+        # stale/unwritten ring slots are excluded by the position mask
+        kk = jnp.concatenate([cache["k"], k], axis=1)
+        vv = jnp.concatenate([cache["v"], v], axis=1)
+        kpos = jnp.concatenate([cache["pos"], positions], axis=1)
+
+    if impl == "flash" and cache is None:
+        # Pallas kernel path: [B,S,H,D] -> [B,H,S,D] kernel layout. Prefill/
+        # train only (contiguous positions); decode keeps the jnp path for
+        # ring-buffer position masks.
+        from ..kernels.flash_attention import flash_attention
+        out = flash_attention(
+            q.swapaxes(1, 2), kk.swapaxes(1, 2), vv.swapaxes(1, 2),
+            causal=True, window=window).swapaxes(1, 2)
+    else:
+        fn = blockwise_attention if impl == "blockwise" else naive_attention
+        out = fn(q, kk, vv, positions, kpos, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out,
+                     p["wo"].reshape(plan.h_pad, hd, cfg.d_model))
+    return out, {"k": k, "v": v}
+
+
+# ------------------------------------------------------------------- MLP
+def swiglu(p: Params, x: jnp.ndarray, bias: bool = False) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if bias:
+        g = g + p["b_gate"]
+        u = u + p["b_up"]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if bias:
+        out = out + p["b_down"]
+    return out
+
+
+def _moe_groups(cfg: ModelConfig, t: int) -> int:
+    """Number of dispatch groups: capacity is enforced per group so the
+    dispatch structures stay O(group) — groups align with data shards."""
+    g = max(1, t // cfg.moe_group)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_sort(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort/scatter MoE dispatch (MaxText-style 'ragged' dropping impl).
+
+    Zero dispatch matmul FLOPs and O(t*k*d) dispatch memory: tokens are
+    argsorted by expert within a group, placed into per-expert capacity
+    buffers with scatter (overflow dropped), and combined back with a
+    scatter-add. The sort/scatter are group-local, so sharding groups over
+    the data axes keeps dispatch communication-free; the only collectives
+    are the ones the partitioner inserts around the e-sharded expert matmul.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    ng = _moe_groups(cfg, t)
+    sg = t // ng
+    cap = max(1, int(cfg.capacity_factor * sg * k / e))
+    xg = x.reshape(ng, sg, d)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # [g,sg,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(ng, sg * k)
+    order = jnp.argsort(flat_e, axis=1)                      # stable
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)    # [g, sg*k]
+    # position within expert = rank - first occurrence of that expert
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(sorted_e)
+    pos = jnp.arange(sg * k)[None, :] - first
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)    # OOB -> dropped
+    token = order // k                                       # [g, sg*k]
+    src = jnp.take_along_axis(xg, token[..., None], axis=1)  # [g, sg*k, d]
+    gidx = jnp.arange(ng)[:, None]
+    xin = jnp.zeros((ng, e * cap, d), x.dtype)
+    xin = xin.at[gidx, dest].set(src, mode="drop")
+    xin = xin.reshape(ng, e, cap, d)
+
+    gg = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    hh = jax.nn.silu(gg.astype(jnp.float32)).astype(x.dtype) * uu
+    eout = jnp.einsum("gecf,efd->gecd", hh, p["w_down"])
+    eout = eout.reshape(ng, e * cap, d)
+
+    back = jnp.take_along_axis(
+        eout, jnp.where(keep, dest, 0)[..., None], axis=1)   # [g, sg*k, d]
+    gflat = jnp.take_along_axis(gate.reshape(ng, sg * k), order, axis=1)
+    w = jnp.where(keep, gflat, 0.0).astype(jnp.float32)
+    contrib = back.astype(jnp.float32) * w[..., None]
+    out = jnp.zeros((ng, sg, d), jnp.float32)
+    out = out.at[gidx, token].add(contrib)
+    out = out.astype(x.dtype).reshape(b, s, d)
+
+    me = probs.reshape(t, e).mean(axis=0)
+    ce = jax.nn.one_hot(idx.reshape(t, k), e,
+                        dtype=jnp.float32).sum(1).mean(0)
+    aux = e * jnp.sum(me * ce)
+    if cfg.n_shared_experts:
+        out = out + swiglu(p["shared"], x)
+    return out, aux
+
+
+def moe_einsum(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style one-hot dispatch einsums with per-group capacity.
+
+    Kept as the reference/ablation implementation: dispatch costs
+    O(t * group * k * cf) one-hot einsum FLOPs, which the sort impl avoids
+    (see EXPERIMENTS.md §Perf iteration on deepseek_moe_16b).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    ng = _moe_groups(cfg, t)
+    sg = t // ng
+    cap = max(1, int(cfg.capacity_factor * sg * k / e))
+    xg = x.reshape(ng, sg, d)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # [g,sg,k,e]
+    pos = jnp.cumsum(onehot.reshape(ng, sg * k, e), axis=1) - 1.0
+    pos = pos.reshape(ng, sg, k, e)
+    keep = (pos < cap) & (onehot > 0)
+    pos_cap = jax.nn.one_hot(
+        jnp.where(keep, pos, cap).astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("gske,gskec->gsec", onehot, pos_cap)
+    combine = jnp.einsum("gske,gsk,gskec->gsec", onehot, gate, pos_cap)
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    gg = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    hh = jax.nn.silu(gg.astype(jnp.float32)).astype(x.dtype) * uu
+    eout = jnp.einsum("gecf,efd->gecd", hh, p["w_down"])
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), eout)
+    out = out.reshape(b, s, d)
+    me = probs.reshape(t, e).mean(axis=0)
+    ce = onehot.reshape(t, k, e).sum(1).mean(0)
+    aux = e * jnp.sum(me * ce)
+    if cfg.n_shared_experts:
+        out = out + swiglu(p["shared"], x)
+    return out, aux
+
+
+def moe_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixture-of-experts block; impl selected by cfg.moe_impl."""
+    if cfg.moe_impl == "sort":
+        return moe_sort(cfg, p, x)
+    return moe_einsum(cfg, p, x)
+
+
+# ------------------------------------------------------------------- SSD
+def ssd_chunked(x, dt, A_log, B, C, D, chunk: int, return_state: bool = False):
+    """Mamba2 SSD, chunked dual form (arXiv:2405.21060 listing 1).
+
+    x:  [b, s, h, p]   (heads h, head dim p)
+    dt: [b, s, h]      (softplus-ed outside)
+    A_log: [h]         B, C: [b, s, n]  (single group), D: [h]
+    Returns y: [b, s, h, p], or (y, final_state [b,h,p,n]) when
+    ``return_state`` (the prefill -> decode handoff).
+    """
+    b, s, h, hp = x.shape
+    n = B.shape[-1]
+    if s % chunk:
+        # pad to a chunk multiple; dt=0 makes padding a no-op for the state
+        pad = chunk - s % chunk
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        out = ssd_chunked(xp, dtp, A_log, Bp, Cp, D, chunk, return_state)
+        if return_state:
+            return out[0][:, :s], out[1]
+        return out[:, :s]
+    nc = s // chunk
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    A = -jnp.exp(A_log.astype(jnp.float32))                  # [h], negative
+    dA = dtf * A                                             # [b,s,h]
+    xc = xf.reshape(b, nc, chunk, h, hp)
+    dtc = dtf.reshape(b, nc, chunk, h)
+    dAc = dA.reshape(b, nc, chunk, h)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, n)
+    seg = jnp.cumsum(dAc, axis=2)                            # [b,nc,l,h]
+    # intra-chunk (diagonal block): attention-like with decay matrix L
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # [b,nc,l,l,h]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)               # [b,nc,l,l]
+    y_diag = jnp.einsum("bclm,bclmh,bcmh,bcmhp->bclhp",
+                        cb, L, dtc, xc)
+    # chunk-level states: decayed sum of inputs
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)          # [b,nc,l,h]
+    states = jnp.einsum("bcln,bclh,bclh,bclhp->bchpn",
+                        Bc, decay_to_end, dtc, xc)           # [b,nc,h,p,n]
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                  # [b,nc,h]
+
+    def scan_fn(prev, inp):
+        st, dec = inp
+        new = st + dec[..., None, None] * prev
+        return new, prev                                     # emit state *before* chunk
+
+    init = jnp.zeros((b, h, hp, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                 # [b,nc,h,p,n]
+    # contribution of carried state to each position
+    state_decay = jnp.exp(seg)                               # decay from chunk start
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                       Cc, state_decay, prev_states)
+    y = (y_diag + y_off).reshape(b, s, h, hp)
+    y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(state, x, dt, A_log, B, C, D):
+    """Single-token SSD recurrence. state: [b,h,p,n]; x: [b,h,p];
+    dt: [b,h]; B,C: [b,n]. Returns (y [b,h,p], new state)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32) * A)                 # [b,h]
+    xf = x.astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(jnp.float32), xf,
+                     B.astype(jnp.float32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 prev: Optional[jnp.ndarray]):
+    """Depthwise causal conv. x: [B,S,F], w: [K,F], prev: [B,K-1,F] or None.
+    Implemented as a sum of K shifted slices (no gather blowup).
+    Returns (silu(conv(x)), new_prev [B,K-1,F])."""
+    b, s, f = x.shape
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((b, k - 1, f), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+            for i in range(k))
+    y = jax.nn.silu(y).astype(x.dtype)
+    return y, xp[:, -(k - 1):, :]
+
+
+def ssm_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              want_cache: bool = False):
+    """Mamba2 mixer. x: [B,S,D]. If ``cache`` is given (decode), S must be 1.
+
+    Projections are separate (w_z/w_x head-sharded over the model axis,
+    small w_B/w_C/w_dt replicated) so all SSD math is shard-local and the
+    only collective is the all-reduce after w_out — the Megatron pattern.
+
+    Returns (out [B,S,D], new_cache)."""
+    b, s, d = x.shape
+    h, hp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = h * hp
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xin = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    Bc = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    Cc = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    cv = cache or {}
+    xin, conv_x = _causal_conv(xin, p["conv_x"], cv.get("conv_x"))
+    Bc, conv_B = _causal_conv(Bc, p["conv_B"], cv.get("conv_B"))
+    Cc, conv_C = _causal_conv(Cc, p["conv_C"], cv.get("conv_C"))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(b, s, h, hp)
+    if cache is None:
+        if want_cache:  # prefill: also hand the final state to decode
+            y, new_state = ssd_chunked(xh, dt, p["A_log"], Bc, Cc, p["D"],
+                                       cfg.ssm_chunk, return_state=True)
+        else:
+            y = ssd_chunked(xh, dt, p["A_log"], Bc, Cc, p["D"],
+                            cfg.ssm_chunk)
+            new_state = None
+    else:
+        y1, new_state = ssd_decode_step(
+            cache["state"], xh[:, 0], dt[:, 0], p["A_log"], Bc[:, 0],
+            Cc[:, 0], p["D"])
+        y = y1[:, None]
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_cache = ({"state": new_state, "conv_x": conv_x, "conv_B": conv_B,
+                  "conv_C": conv_C}
+                 if (cache is not None or want_cache) else None)
+    return out, new_cache

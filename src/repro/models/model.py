@@ -1,0 +1,552 @@
+"""The LM: parameter init/specs, forward, train/prefill/decode steps.
+
+One decoder block definition per family, lax.scan over stacked layer
+parameters (compile time O(1) in depth), optional jax.checkpoint (remat)
+around the block. All tensors carry PartitionSpecs derived from
+models.sharding; steps are jit-able with explicit in/out shardings by
+launch/dryrun.py and launch/train.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import layers
+from .config import ModelConfig, ShapeConfig
+from .sharding import AttnPlan, batch_axes, pad_to, plan_attention, spec, tp_size
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = tp_size(mesh)
+        self.plan: Optional[AttnPlan] = None
+        if not cfg.is_attention_free:
+            self.plan = plan_attention(cfg.n_heads, cfg.n_kv_heads, self.tp)
+        self.vocab_pad = pad_to(cfg.vocab, self.tp)
+        if cfg.has_ssm:
+            assert (cfg.ssm_heads * cfg.ssm_head_dim) % self.tp == 0, \
+                "ssm heads*dim must divide TP"
+        assert cfg.d_ff == 0 or cfg.d_ff % self.tp == 0, "d_ff must divide TP"
+
+    # ------------------------------------------------------------- params
+    def _block_shapes(self) -> Dict[str, Tuple[Tuple[int, ...], P]]:
+        """Leaf name -> (shape, partition spec) for ONE block (unstacked)."""
+        cfg, plan = self.cfg, self.plan
+        d, hd = cfg.d_model, cfg.head_dim
+        out: Dict[str, Tuple[Tuple[int, ...], P]] = {}
+        m = self.mesh
+
+        def add(name, shape, *axes):
+            out[name] = (shape, spec(m, *axes))
+
+        add("ln1", (d,), None)
+        if not cfg.is_attention_free:
+            add("attn.wq", (d, plan.h_pad * hd), None, "model")
+            add("attn.wk", (d, plan.kv_virtual * hd), None, "model")
+            add("attn.wv", (d, plan.kv_virtual * hd), None, "model")
+            add("attn.wo", (plan.h_pad * hd, d), "model", None)
+            if cfg.qkv_bias:
+                add("attn.bq", (plan.h_pad * hd,), "model")
+                add("attn.bk", (plan.kv_virtual * hd,), "model")
+                add("attn.bv", (plan.kv_virtual * hd,), "model")
+        if cfg.has_ssm:
+            h, hp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            di = h * hp
+            add("ssm.w_z", (d, di), None, "model")
+            add("ssm.w_x", (d, di), None, "model")
+            add("ssm.w_B", (d, n), None, None)
+            add("ssm.w_C", (d, n), None, None)
+            add("ssm.w_dt", (d, h), None, None)
+            add("ssm.conv_x", (cfg.d_conv, di), None, "model")
+            add("ssm.conv_B", (cfg.d_conv, n), None, None)
+            add("ssm.conv_C", (cfg.d_conv, n), None, None)
+            add("ssm.dt_bias", (h,), None)
+            add("ssm.A_log", (h,), None)
+            add("ssm.D", (h,), None)
+            add("ssm.norm", (di,), "model")
+            add("ssm.w_out", (di, d), "model", None)
+        if cfg.family == "hybrid":
+            add("mix", (2,), None)
+        if cfg.n_experts:
+            f = cfg.d_ff
+            dax = "fsdp" if cfg.fsdp_experts else None
+            add("ln2", (d,), None)
+            add("moe.router", (d, cfg.n_experts), None, None)
+            add("moe.w_gate", (cfg.n_experts, d, f), "expert", dax, None)
+            add("moe.w_up", (cfg.n_experts, d, f), "expert", dax, None)
+            add("moe.w_down", (cfg.n_experts, f, d), "expert", dax, None)
+            if cfg.n_shared_experts:
+                fs = cfg.n_shared_experts * f
+                add("moe.shared.w_gate", (d, fs), None, "model")
+                add("moe.shared.w_up", (d, fs), None, "model")
+                add("moe.shared.w_down", (fs, d), "model", None)
+        elif cfg.d_ff:
+            add("ln2", (d,), None)
+            add("mlp.w_gate", (d, cfg.d_ff), None, "model")
+            add("mlp.w_up", (d, cfg.d_ff), None, "model")
+            add("mlp.w_down", (cfg.d_ff, d), "model", None)
+            if cfg.mlp_bias:
+                add("mlp.b_gate", (cfg.d_ff,), "model")
+                add("mlp.b_up", (cfg.d_ff,), "model")
+                add("mlp.b_down", (d,), None)
+        return out
+
+    def _top_shapes(self) -> Dict[str, Tuple[Tuple[int, ...], P]]:
+        cfg = self.cfg
+        # embed is d-sharded (local gather); lm_head is vocab-sharded
+        out = {
+            "embed": ((self.vocab_pad, cfg.d_model), spec(self.mesh, None, "model")),
+            "final_norm": ((cfg.d_model,), spec(self.mesh, None)),
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = ((cfg.d_model, self.vocab_pad),
+                              spec(self.mesh, None, "vocab"))
+        return out
+
+    def param_specs(self) -> Params:
+        # layer params are ALWAYS stacked on a leading L axis;
+        # cfg.scan_layers only selects lax.scan vs an unrolled Python loop
+        blocks = {}
+        for name, (shape, sp) in self._block_shapes().items():
+            _set(blocks, name, P(None, *sp))
+        tops = {k: sp for k, (s, sp) in self._top_shapes().items()}
+        return {"blocks": blocks, **tops}
+
+    def param_shapes(self) -> Params:
+        """ShapeDtypeStructs (for dry-run lowering without allocation)."""
+        dt = _dtype(self.cfg)
+        L = self.cfg.n_layers
+        blocks = {}
+        for name, (shape, sp) in self._block_shapes().items():
+            _set(blocks, name, jax.ShapeDtypeStruct((L, *shape), dt))
+        out = {"blocks": blocks}
+        for k, (shape, sp) in self._top_shapes().items():
+            out[k] = jax.ShapeDtypeStruct(shape, dt)
+        return out
+
+    def init(self, key: jax.Array) -> Params:
+        """Real initialization (smoke tests / examples; NOT used by dry-run)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        L = cfg.n_layers
+        shapes = self._block_shapes()
+        keys = jax.random.split(key, len(shapes) + 2)
+        blocks = {}
+        for i, (name, (shape, sp)) in enumerate(shapes.items()):
+            leaf = self._init_leaf(keys[i], name, (L, *shape), dt)
+            _set(blocks, name, leaf)
+        out = {"blocks": blocks}
+        for j, (k, (shape, sp)) in enumerate(self._top_shapes().items()):
+            kk = jax.random.fold_in(keys[-1], j)
+            out[k] = (jax.random.normal(kk, shape, jnp.float32) * 0.02
+                      ).astype(dt)
+        if not cfg.is_attention_free:
+            out["blocks"] = self._mask_dead_heads(out["blocks"])
+        return out
+
+    def _init_leaf(self, key, name, shape, dt):
+        base = name.split(".")[-1]
+        if base in ("ln1", "ln2", "norm"):
+            return jnp.ones(shape, dt)
+        if base == "mix":
+            return jnp.ones(shape, dt)
+        if base in ("dt_bias",):
+            return jnp.zeros(shape, jnp.float32)
+        if base == "A_log":
+            return jnp.log(jnp.ones(shape, jnp.float32))
+        if base == "D":
+            return jnp.ones(shape, jnp.float32)
+        if base.startswith("b"):
+            return jnp.zeros(shape, dt)
+        scale = 0.02
+        if base in ("wo", "w_down", "w_out"):
+            scale = 0.02 / math.sqrt(2 * self.cfg.n_layers)
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+    def _dead_head_mask(self) -> jnp.ndarray:
+        """[h_pad] 1.0 for real q-head slots, 0.0 for padding slots."""
+        plan, cfg = self.plan, self.cfg
+        gs = cfg.n_heads // cfg.n_kv_heads
+        gs_p = plan.h_pad // (plan.kv_virtual // plan.repl)
+        slot = jnp.arange(plan.h_pad)
+        grp, r = slot // gs_p, slot % gs_p
+        return ((grp < cfg.n_kv_heads) & (r < gs)).astype(jnp.float32)
+
+    def _mask_dead_heads(self, blocks: Params) -> Params:
+        """Zero wo rows of padded q-head slots => padding never affects
+        the function (heads compute garbage that is multiplied by zero)."""
+        mask = self._dead_head_mask()
+        hd, d = self.cfg.head_dim, self.cfg.d_model
+        wo = _get(blocks, "attn.wo")
+        shape = wo.shape
+        wom = wo.reshape(shape[0], -1, hd, d) * mask[None, :, None, None]
+        _set(blocks, "attn.wo", wom.reshape(shape).astype(wo.dtype))
+        return blocks
+
+    # ------------------------------------------------------------ forward
+    def _block(self, p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+               cache: Optional[Params], window: int,
+               want_cache: bool = False,
+               ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+        """Returns (x, new_cache, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        # NOTE: an explicit Megatron-SP all-gather boundary here was tried
+        # and REFUTED — XLA pins full f32 activation all-reduces to it
+        # (51.5s vs 24.6s collective term on yi_34b; EXPERIMENTS.md §Perf).
+        # Leaving the mixers unconstrained lets the partitioner pick the
+        # cheaper schedule from the seq-sharded residual constraint alone.
+        new_cache: Dict[str, Any] = {}
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            a, kv = layers.attention_layer(
+                cfg, self.plan, p["attn"], h, positions,
+                cache=cache.get("attn") if cache else None, window=window,
+                impl=cfg.attn_impl if cache is None else "blockwise")
+            x = x + a
+            new_cache["attn_kv"] = kv
+        elif cfg.family == "ssm":
+            a, sc = layers.ssm_layer(cfg, p["ssm"], h,
+                                     cache=cache.get("ssm") if cache else None,
+                                     want_cache=want_cache)
+            x = x + a
+            new_cache["ssm"] = sc
+        elif cfg.family == "hybrid":
+            a, kv = layers.attention_layer(
+                cfg, self.plan, p["attn"], h, positions,
+                cache=cache.get("attn") if cache else None, window=window,
+                impl=cfg.attn_impl if cache is None else "blockwise")
+            s_out, sc = layers.ssm_layer(
+                cfg, p["ssm"], h, cache=cache.get("ssm") if cache else None,
+                want_cache=want_cache)
+            mix = p["mix"].astype(jnp.float32)
+            x = x + (a * mix[0] + s_out * mix[1]).astype(x.dtype) * 0.5
+            new_cache["attn_kv"] = kv
+            new_cache["ssm"] = sc
+        else:
+            raise ValueError(cfg.family)
+        if cfg.n_experts:
+            h2 = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            mo, aux = layers.moe_layer(cfg, p["moe"], h2)
+            x = x + mo
+        elif cfg.d_ff:
+            h2 = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + layers.swiglu(p["mlp"], h2, bias=cfg.mlp_bias)
+        x = jax.lax.with_sharding_constraint(x, self._act_spec(x))
+        return x, new_cache, aux
+
+    def _act_spec(self, x: jnp.ndarray) -> P:
+        """Residual-stream sharding: batch over data axes (when divisible);
+        sequence over the model axis when seq_shard (sequence parallelism —
+        activations and their grads live reduce-scattered between blocks)."""
+        b, s, _ = x.shape
+        seq_ax = "model" if (self.cfg.seq_shard and s > 1
+                             and s % self.tp == 0) else None
+        return spec(self.mesh, "batch", seq_ax, None, batch_size=b)
+
+    def embed_tokens(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        x = layers.rmsnorm(x, params["final_norm"], self.cfg.norm_eps)
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        # keep the contraction (d) axis UNsharded: resharding the small tied
+        # head here costs ~MBs; contracting over a sharded d would all-reduce
+        # the full [B,S,V] f32 logits (measured 24.7GB wire on mamba2)
+        head = jax.lax.with_sharding_constraint(
+            head, spec(self.mesh, None, "vocab"))
+        lg = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+        # mask padded vocab slots
+        valid = jnp.arange(self.vocab_pad) < self.cfg.vocab
+        return jnp.where(valid, lg, -1e30)
+
+    def forward(self, params: Params, tokens: Optional[jnp.ndarray],
+                embeds: Optional[jnp.ndarray] = None, window: int = 0,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence forward. Returns (hidden [B,S,D], aux_loss)."""
+        cfg = self.cfg
+        parts = []
+        if embeds is not None:
+            parts.append(embeds.astype(_dtype(cfg)))
+        if tokens is not None:
+            parts.append(self.embed_tokens(params, tokens))
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = jax.lax.with_sharding_constraint(x, self._act_spec(x))
+
+        blk = functools.partial(self._fwd_block, positions=positions,
+                                window=window)
+        if cfg.remat:
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(
+                lambda carry, lp: (blk(carry, lp), None),
+                (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, aux = blk((x, aux), lp)
+        return x, aux
+
+    def _fwd_block(self, carry, lp, *, positions, window):
+        x, aux = carry
+        x, _, a = self._block(lp, x, positions, cache=None, window=window)
+        return x, aux + a
+
+    # -------------------------------------------------------------- steps
+    def loss_fn(self, params: Params, batch: Dict[str, jnp.ndarray],
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        window = cfg.attn_window
+        x, aux = self.forward(params, batch.get("tokens"),
+                              batch.get("embeds"), window=window)
+        labels = batch["labels"]
+        # frontend tokens (prepended embeds) carry no loss
+        x_text = x[:, -labels.shape[1]:, :]
+        lg = self.logits(params, x_text)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+        loss = ce + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- decode
+    def cache_shapes(self, batch: int, window: int) -> Params:
+        """ShapeDtypeStructs of the decode cache (ring buffer of ``window``)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        L = cfg.n_layers
+        out: Dict[str, Any] = {}
+        if not cfg.is_attention_free:
+            kvh, hd = self.plan.kv_virtual, cfg.head_dim
+            kv_dt = jnp.int8 if cfg.kv_quant else dt
+            out["k"] = jax.ShapeDtypeStruct((L, batch, window, kvh, hd), kv_dt)
+            out["v"] = jax.ShapeDtypeStruct((L, batch, window, kvh, hd), kv_dt)
+            if cfg.kv_quant:
+                out["k_scale"] = jax.ShapeDtypeStruct(
+                    (L, batch, window, kvh), jnp.float32)
+                out["v_scale"] = jax.ShapeDtypeStruct(
+                    (L, batch, window, kvh), jnp.float32)
+            out["pos"] = jax.ShapeDtypeStruct((L, batch, window), jnp.int32)
+        if cfg.has_ssm:
+            h, hp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            di, k = h * hp, cfg.d_conv
+            out["state"] = jax.ShapeDtypeStruct((L, batch, h, hp, n),
+                                                jnp.float32)
+            out["conv_x"] = jax.ShapeDtypeStruct((L, batch, k - 1, di), dt)
+            out["conv_B"] = jax.ShapeDtypeStruct((L, batch, k - 1, n), dt)
+            out["conv_C"] = jax.ShapeDtypeStruct((L, batch, k - 1, n), dt)
+        return out
+
+    def cache_specs(self, batch: Optional[int] = None) -> Params:
+        m = self.mesh
+        cfg = self.cfg
+        bs = batch  # batch=1 (long_500k) falls back to replicated
+        out: Dict[str, Any] = {}
+        if not cfg.is_attention_free:
+            out["k"] = spec(m, None, "batch", None, "model", None, batch_size=bs)
+            out["v"] = spec(m, None, "batch", None, "model", None, batch_size=bs)
+            if cfg.kv_quant:
+                out["k_scale"] = spec(m, None, "batch", None, "model",
+                                      batch_size=bs)
+                out["v_scale"] = spec(m, None, "batch", None, "model",
+                                      batch_size=bs)
+            out["pos"] = spec(m, None, "batch", None, batch_size=bs)
+        if cfg.has_ssm:
+            out["state"] = spec(m, None, "batch", "model", None, None,
+                                batch_size=bs)
+            out["conv_x"] = spec(m, None, "batch", None, "model", batch_size=bs)
+            out["conv_B"] = spec(m, None, "batch", None, None, batch_size=bs)
+            out["conv_C"] = spec(m, None, "batch", None, None, batch_size=bs)
+        return out
+
+    def init_cache(self, batch: int, window: int) -> Params:
+        shapes = self.cache_shapes(batch, window)
+        out = {}
+        for k, sd in shapes.items():
+            if k == "pos":
+                out[k] = jnp.full(sd.shape, 2 ** 30, sd.dtype)
+            else:
+                out[k] = jnp.zeros(sd.shape, sd.dtype)
+        return out
+
+    def decode_step(self, params: Params, cache: Params,
+                    tokens: jnp.ndarray, t: jnp.ndarray,
+                    ) -> Tuple[jnp.ndarray, Params]:
+        """One token for the whole batch. tokens: [B,1]; t: scalar int32
+        (current absolute position). Ring-buffer insert at t % window."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(t[None, None], (b, 1)).astype(jnp.int32)
+        window = 0
+        if not cfg.is_attention_free:
+            window = cache["k"].shape[2]
+            slot = (t % window).astype(jnp.int32)
+
+        def blk(x, inp):
+            lp, lc = inp
+            layer_cache: Dict[str, Any] = {}
+            if not cfg.is_attention_free:
+                if cfg.kv_quant:
+                    dt = x.dtype
+                    layer_cache["attn"] = {
+                        "k": layers.dequantize_kv(lc["k"], lc["k_scale"], dt),
+                        "v": layers.dequantize_kv(lc["v"], lc["v_scale"], dt),
+                        "pos": lc["pos"]}
+                else:
+                    layer_cache["attn"] = {"k": lc["k"], "v": lc["v"],
+                                           "pos": lc["pos"]}
+            if cfg.has_ssm:
+                layer_cache["ssm"] = {
+                    "state": lc["state"], "conv_x": lc["conv_x"],
+                    "conv_B": lc["conv_B"], "conv_C": lc["conv_C"]}
+            aw = cfg.attn_window if cfg.attn_window else 0
+            x, nc, _ = self._block(lp, x, positions, layer_cache, window=aw)
+            new_lc = dict(lc)
+            if not cfg.is_attention_free:
+                kv = nc["attn_kv"]
+                k_new, v_new = kv["k"][:, 0], kv["v"][:, 0]
+                if cfg.kv_quant:
+                    k_new, ks = layers.quantize_kv(k_new)
+                    v_new, vs = layers.quantize_kv(v_new)
+                    new_lc["k_scale"] = jax.lax.dynamic_update_index_in_dim(
+                        lc["k_scale"], ks, slot, axis=1)
+                    new_lc["v_scale"] = jax.lax.dynamic_update_index_in_dim(
+                        lc["v_scale"], vs, slot, axis=1)
+                new_lc["k"] = jax.lax.dynamic_update_index_in_dim(
+                    lc["k"], k_new, slot, axis=1)
+                new_lc["v"] = jax.lax.dynamic_update_index_in_dim(
+                    lc["v"], v_new, slot, axis=1)
+                new_lc["pos"] = jax.lax.dynamic_update_index_in_dim(
+                    lc["pos"], positions[:, 0], slot, axis=1)
+            if cfg.has_ssm:
+                sc = nc["ssm"]
+                new_lc["state"] = sc["state"]
+                new_lc["conv_x"] = sc["conv_x"]
+                new_lc["conv_B"] = sc["conv_B"]
+                new_lc["conv_C"] = sc["conv_C"]
+            return x, new_lc
+
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(blk, x, (params["blocks"], cache))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                lc = jax.tree.map(lambda a: a[i], cache)
+                x, nlc = blk(x, (lp, lc))
+                outs.append(nlc)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        lg = self.logits(params, x)
+        return lg, new_cache
+
+    def prefill(self, params: Params, tokens: jnp.ndarray,
+                embeds: Optional[jnp.ndarray] = None,
+                ) -> jnp.ndarray:
+        """Prefill forward; returns last-position logits [B,1,V]."""
+        window = self.cfg.attn_window
+        x, _ = self.forward(params, tokens, embeds, window=window)
+        return self.logits(params, x[:, -1:, :])
+
+    def prefill_with_cache(self, params: Params, tokens: Optional[jnp.ndarray],
+                           embeds: Optional[jnp.ndarray] = None,
+                           window: Optional[int] = None,
+                           ) -> Tuple[jnp.ndarray, Params]:
+        """Prefill that also materializes the decode cache (ring buffer of
+        ``window`` slots; decode continues at t = prompt length).
+        Returns (last logits [B,1,Vp], cache)."""
+        cfg = self.cfg
+        parts = []
+        if embeds is not None:
+            parts.append(embeds.astype(_dtype(cfg)))
+        if tokens is not None:
+            parts.append(self.embed_tokens(params, tokens))
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        b, s, _ = x.shape
+        if window is None:
+            window = min(s, cfg.attn_window) if cfg.attn_window else s
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = jax.lax.with_sharding_constraint(x, self._act_spec(x))
+
+        def blk(carry, lp):
+            xx, aux = carry
+            xx, nc, a = self._block(lp, xx, positions, cache=None,
+                                    window=cfg.attn_window, want_cache=True)
+            ys: Dict[str, Any] = {}
+            if not cfg.is_attention_free:
+                ys["k"] = nc["attn_kv"]["k"]
+                ys["v"] = nc["attn_kv"]["v"]
+            if cfg.has_ssm:
+                ys.update(nc["ssm"])
+            return (xx, aux + a), ys
+
+        if cfg.scan_layers:
+            (x, _), per_layer = jax.lax.scan(
+                blk, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        else:
+            outs = []
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                (x, aux), ys = blk((x, aux), lp)
+                outs.append(ys)
+            per_layer = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+        cache = self.init_cache(b, window)
+        take = min(window, s)
+        src = jnp.arange(s - take, s)
+        slots = src % window
+        if not cfg.is_attention_free:
+            k_all, v_all = per_layer["k"], per_layer["v"]  # [L,B,S,KV,hd]
+            k_new = k_all[:, :, s - take:s]
+            v_new = v_all[:, :, s - take:s]
+            if cfg.kv_quant:
+                k_new, ks = layers.quantize_kv(k_new)
+                v_new, vs = layers.quantize_kv(v_new)
+                cache["k_scale"] = cache["k_scale"].at[:, :, slots].set(ks)
+                cache["v_scale"] = cache["v_scale"].at[:, :, slots].set(vs)
+            cache["k"] = cache["k"].at[:, :, slots].set(
+                k_new.astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, :, slots].set(
+                v_new.astype(cache["v"].dtype))
+            cache["pos"] = cache["pos"].at[:, :, slots].set(
+                jnp.broadcast_to(src[None, None, :], (cfg.n_layers, b, take)))
+        if cfg.has_ssm:
+            cache["state"] = per_layer["state"]
+            cache["conv_x"] = per_layer["conv_x"]
+            cache["conv_B"] = per_layer["conv_B"]
+            cache["conv_C"] = per_layer["conv_C"]
+        lg = self.logits(params, x[:, -1:, :])
+        return lg, cache
+
+
+def _set(d: Dict[str, Any], dotted: str, val) -> None:
+    ks = dotted.split(".")
+    for k in ks[:-1]:
+        d = d.setdefault(k, {})
+    d[ks[-1]] = val
+
+
+def _get(d: Dict[str, Any], dotted: str):
+    for k in dotted.split("."):
+        d = d[k]
+    return d

@@ -1,0 +1,122 @@
+"""Sharding rules: logical axes -> mesh axes, and the attention head plan.
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model") single-pod.
+Logical tensor axes used by the model code:
+
+  batch   -> ("pod", "data")         data parallelism (+ pod axis)
+  model   -> "model"                 tensor parallelism
+  vocab   -> "model"
+  expert  -> "model"                 expert parallelism
+  None    -> replicated
+
+Indivisible head counts are handled by the *attention plan*: q-heads are
+padded (zero o_proj rows keep the function exact) and kv heads are expanded
+to "virtual" heads (vLLM-style replication) so that every sharded axis is
+divisible by the TP degree and all attention math stays shard-local.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def spec(mesh: Mesh, *axes, batch_size: Optional[int] = None) -> P:
+    """Translate logical axes to a PartitionSpec for this mesh.
+
+    ``batch_size``: when given, the "batch" logical axis falls back to
+    replicated if the size does not divide the data-parallel degree
+    (e.g. the global_batch=1 long-context decode shape)."""
+    out = []
+    for a in axes:
+        if a == "batch":
+            ba = batch_axes(mesh)
+            if batch_size is not None and batch_size % dp_size(mesh):
+                ba = None
+            out.append(ba)
+        elif a in ("model", "vocab", "expert"):
+            out.append("model")
+        elif a == "fsdp":
+            # weight sharding over the data axes (ZeRO-3 style); shares the
+            # batch axes — all-gathered at use, partitioner-inserted
+            out.append(batch_axes(mesh))
+        elif a is None:
+            out.append(None)
+        else:
+            raise ValueError(f"unknown logical axis {a!r}")
+    return P(*out)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_size(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in batch_axes(mesh))
+
+
+@dataclass(frozen=True)
+class AttnPlan:
+    """Padded/virtualized head layout for a given TP degree.
+
+    h_pad      padded q heads (multiple of tp; extra heads functionally dead)
+    kv_virtual virtual kv heads materialized in weights & KV cache
+               (multiple of tp or == true kv heads when replicated=1)
+    group      q heads per virtual kv head (h_pad / kv_virtual)
+    repl       how many times each true kv head is duplicated
+    """
+    n_heads: int
+    n_kv: int
+    h_pad: int
+    kv_virtual: int
+    group: int
+    repl: int
+
+    @property
+    def pad_overhead(self) -> float:
+        return self.h_pad / self.n_heads
+
+
+def plan_attention(n_heads: int, n_kv: int, tp: int) -> AttnPlan:
+    if n_heads % n_kv:
+        raise ValueError("n_heads must be a multiple of n_kv_heads")
+    gs = n_heads // n_kv
+    # Search padded (groups g_p, group size gs_p). Original q head i lands in
+    # padded slot (i//gs)*gs_p + (i%gs), so pairing with its kv head is
+    # preserved; added slots/groups carry zero weights (function unchanged).
+    best: Optional[Tuple[int, int, int]] = None  # (total, g_p, gs_p)
+    for g_p in range(n_kv, 4 * n_kv + 1):
+        for gs_p in range(gs, 4 * gs + 1):
+            total = g_p * gs_p
+            if total % tp:
+                continue
+            hps = total // tp  # q heads per shard
+            # a shard must hold whole groups, or a group must span shards evenly
+            if hps % gs_p and gs_p % hps:
+                continue
+            if best is None or total < best[0]:
+                best = (total, g_p, gs_p)
+    if best is None:
+        raise ValueError(f"no attention plan for H={n_heads} kv={n_kv} tp={tp}")
+    total, g_p, gs_p = best
+    hps = total // tp
+    if hps % gs_p == 0:
+        # whole groups per shard: kv heads sharded directly, no replication
+        kv_virtual, repl = g_p, 1
+    else:
+        # each group spans k shards -> replicate kv k times
+        k = gs_p // hps
+        kv_virtual, repl = g_p * k, k
+    return AttnPlan(n_heads=n_heads, n_kv=n_kv, h_pad=total,
+                    kv_virtual=kv_virtual, group=total // kv_virtual, repl=repl)
+
+
+def pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

@@ -1,0 +1,115 @@
+"""AdamW with ZeRO-1-style optimizer-state sharding.
+
+Optimizer state (m, v, fp32 where params are bf16) is sharded like the
+parameter PLUS the first divisible unsharded tensor axis split over the
+data axes — the partitioner then materializes the reduce-scatter /
+all-gather pattern of ZeRO stage 1 automatically from the sharding
+mismatch between grads (param-sharded) and states (data-sharded).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..models.sharding import batch_axes, dp_size
+
+Params = Any
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init(params: Params) -> Dict[str, Any]:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32)
+        if hasattr(p, "shape") else jnp.zeros((), jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shapes(param_shapes: Params) -> Dict[str, Any]:
+    f32 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_shapes)
+    return {"m": f32, "v": jax.tree.map(lambda x: x, f32),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def zero1_spec(param_spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the first unsharded, divisible tensor axis over the data axes."""
+    dps = batch_axes(mesh)
+    dp = dp_size(mesh)
+    if dp == 1 or not shape:
+        return param_spec
+    axes = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    # already data-sharded (fsdp weights): nothing more to shard over data
+    for ax in axes:
+        used = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in dps for a in used if a):
+            return param_spec
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        if ax is None and dim % dp == 0 and dim > 0:
+            axes[i] = dps if len(dps) > 1 else dps[0]
+            return P(*axes)
+    return param_spec
+
+
+def state_specs(param_specs: Params, param_shapes: Params, mesh: Mesh,
+                zero1: bool = True) -> Dict[str, Any]:
+    if zero1:
+        sharded = jax.tree.map(
+            lambda sp, sh: zero1_spec(sp, sh.shape, mesh),
+            param_specs, param_shapes,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        sharded = param_specs
+    return {"m": sharded, "v": jax.tree.map(lambda x: x, sharded,
+                                            is_leaf=lambda x: isinstance(x, P)),
+            "step": P()}
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def update(cfg: AdamWConfig, grads: Params, state: Dict[str, Any],
+           params: Params) -> Tuple[Params, Dict[str, Any], Dict[str, Any]]:
+    step = state["step"] + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, state["step"])
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

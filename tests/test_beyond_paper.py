@@ -1,0 +1,40 @@
+"""Beyond-paper extensions: warm-start, DSE topologies, portfolio helper."""
+import pytest
+
+from repro.core import suite
+from repro.core.cgra import CGRA
+from repro.core.mapper import MapperConfig, map_loop
+
+
+def test_warm_start_finds_same_ii():
+    g = suite.get("srand")
+    cgra = CGRA(3, 3)
+    cold = map_loop(g, cgra, MapperConfig(solver="cdcl", timeout_s=60))
+    warm = map_loop(g, cgra, MapperConfig(solver="cdcl", timeout_s=60,
+                                          warm_start=True))
+    assert cold.success and warm.success
+    assert warm.ii == cold.ii
+
+
+@pytest.mark.parametrize("topology", ["mesh", "torus", "diag"])
+def test_topologies_map(topology):
+    g = suite.get("bitcount")
+    cgra = CGRA(3, 3, topology=topology)
+    r = map_loop(g, cgra, MapperConfig(solver="auto", timeout_s=60))
+    assert r.success
+    # richer connectivity can never hurt the II
+    if topology != "mesh":
+        mesh_r = map_loop(g, CGRA(3, 3),
+                          MapperConfig(solver="auto", timeout_s=60))
+        assert r.ii <= mesh_r.ii
+
+
+def test_fewer_registers_never_lowers_ii():
+    g = suite.get("srand")
+    r2 = map_loop(g, CGRA(3, 3, n_regs=2),
+                  MapperConfig(solver="auto", timeout_s=60))
+    r8 = map_loop(g, CGRA(3, 3, n_regs=8),
+                  MapperConfig(solver="auto", timeout_s=60))
+    assert r8.success
+    if r2.success:
+        assert r8.ii <= r2.ii

@@ -1,0 +1,94 @@
+"""Fault tolerance: atomic checkpoints, exact resume, elastic resharding."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x, np.float32),
+                              np.asarray(y, np.float32))
+               for x, y in zip(la, lb))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                  "b16": jnp.ones((4, 2), jnp.bfloat16) * 1.5},
+            "step": jnp.int32(7)}
+    ckpt.save(str(tmp_path), 3, tree, extra={"data_cursor": 3}, chunks=2)
+    got, manifest = ckpt.restore(str(tmp_path))
+    assert manifest["step"] == 3
+    assert manifest["extra"]["data_cursor"] == 3
+    assert _leaves_equal(tree, got)
+    assert str(np.asarray(got["a"]["b16"]).dtype) == "bfloat16"
+
+
+def test_latest_and_retention(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, {"x": jnp.ones(2)}, keep_last=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_interrupted_write_is_invisible(tmp_path):
+    """A .tmp dir (killed writer) must never be picked up."""
+    ckpt.save(str(tmp_path), 1, {"x": jnp.ones(2)})
+    os.makedirs(os.path.join(str(tmp_path), "ckpt_00000002.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_crash_resume_is_bitwise_exact(tmp_path):
+    """Train 12 steps with a crash at 8 + resume == train 12 uninterrupted.
+    This is the end-to-end fault-tolerance contract."""
+    cfg = get_config("minitron_8b").smoke()
+    d1 = str(tmp_path / "a")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_loop(cfg, steps=12, global_batch=4, seq_len=16, ckpt_dir=d1,
+                   ckpt_every=4, fail_at=8, log_every=0)
+    out_resumed = train_loop(cfg, steps=12, global_batch=4, seq_len=16,
+                             ckpt_dir=d1, ckpt_every=4, resume=True,
+                             log_every=0)
+    d2 = str(tmp_path / "b")
+    out_straight = train_loop(cfg, steps=12, global_batch=4, seq_len=16,
+                              ckpt_dir=d2, ckpt_every=4, log_every=0)
+    p1 = out_resumed.pop("params")
+    p2 = out_straight.pop("params")
+    assert _leaves_equal(p1, p2)
+    assert out_resumed["loss"] == out_straight["loss"]
+
+
+def test_elastic_restore_to_different_mesh(tmp_path):
+    """A checkpoint written under one mesh restores onto another (the
+    elastic-rescale path); values identical, shardings re-derived."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8)}
+    ckpt.save(str(tmp_path), 1, tree)
+    mesh = make_host_mesh()   # 1 device — "different" pod count
+    specs = {"w": P(None, None)}
+    got, _ = ckpt.restore(str(tmp_path), mesh=mesh, specs=specs)
+    assert _leaves_equal(tree, got)
+    assert got["w"].sharding.mesh.devices.size == mesh.devices.size
+
+
+def test_data_pipeline_stateless_and_sharded():
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    cfg = get_config("minitron_8b").smoke()
+    data = SyntheticLM(DataConfig(seed=1, global_batch=8, seq_len=16), cfg)
+    a = data.batch_at(5)
+    b = data.batch_at(5)
+    assert np.array_equal(a["tokens"], b["tokens"])          # deterministic
+    c = data.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # shards partition the global batch: shard recompute == global slice
+    s0 = data.batch_at(5, shard=0, n_shards=2)
+    s1 = data.batch_at(5, shard=1, n_shards=2)
+    assert s0["tokens"].shape[0] == 4 and s1["tokens"].shape[0] == 4
+    assert not np.array_equal(s0["tokens"], s1["tokens"])

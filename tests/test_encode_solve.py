@@ -1,0 +1,98 @@
+"""SAT encoding + solver backends."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cgra import CGRA
+from repro.core.cnf import CNF
+from repro.core.dfg import DFG, running_example
+from repro.core.encode import EncoderSession, encode
+from repro.core.sat import SAT, UNKNOWN, UNSAT, solve
+from repro.core.sat.cdcl import CDCLSolver
+from repro.core.schedule import min_ii
+
+
+def test_running_example_sat_at_paper_ii():
+    g = running_example()
+    enc = encode(g, CGRA(2, 2), 3)
+    st_, model = solve(enc.cnf, "z3")
+    assert st_ == SAT
+    placement = enc.decode(model)
+    assert len(placement) == g.n
+
+
+def test_running_example_unsat_below_mii():
+    g = running_example()
+    enc = encode(g, CGRA(2, 2), 2)
+    assert solve(enc.cnf, "z3")[0] == UNSAT
+    assert solve(enc.cnf, "cdcl")[0] == UNSAT
+
+
+def test_clause_family_counts():
+    g = running_example()
+    enc = encode(g, CGRA(2, 2), 3)
+    st_ = enc.stats
+    assert st_["c1"] > 0 and st_["c2"] > 0 and st_["c3"] > 0
+    assert st_["c1"] + st_["c2"] + st_["c3"] == st_["clauses"]
+
+
+def test_amo_encodings_equisatisfiable():
+    g = running_example()
+    for ii in (2, 3):
+        a = EncoderSession(g, CGRA(2, 2), "pairwise").encode(ii)
+        b = EncoderSession(g, CGRA(2, 2), "sequential").encode(ii)
+        ra = solve(a.cnf, "z3")[0]
+        rb = solve(b.cnf, "z3")[0]
+        assert ra == rb
+
+
+@st.composite
+def random_cnf(draw):
+    n_vars = draw(st.integers(3, 12))
+    n_clauses = draw(st.integers(1, 40))
+    clauses = []
+    for _ in range(n_clauses):
+        k = draw(st.integers(1, 3))
+        cl = []
+        for _ in range(k):
+            v = draw(st.integers(1, n_vars))
+            cl.append(v if draw(st.booleans()) else -v)
+        clauses.append(tuple(cl))
+    cnf = CNF()
+    cnf.n_vars = n_vars
+    for cl in clauses:
+        cnf.add_clause(cl)
+    return cnf
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_cnf())
+def test_cdcl_agrees_with_z3(cnf):
+    """Property: our CDCL and Z3 agree on SAT/UNSAT; SAT models check out."""
+    rz, _ = solve(cnf, "z3")
+    rc, model = solve(cnf, "cdcl")
+    assert rz == rc
+    if rc == SAT:
+        assert cnf.check(model)
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_cnf())
+def test_walksat_models_are_models(cnf):
+    st_, model = solve(cnf, "walksat", walksat_steps=512, walksat_batch=8)
+    if st_ == SAT:
+        assert cnf.check(model)
+
+
+def test_cdcl_empty_clause_unsat():
+    cnf = CNF()
+    cnf.n_vars = 2
+    cnf.add_clause([])
+    assert CDCLSolver(cnf).solve()[0] == UNSAT
+
+
+def test_portfolio_solves():
+    g = running_example()
+    enc = encode(g, CGRA(2, 2), 3)
+    st_, model = solve(enc.cnf, "portfolio")
+    assert st_ == SAT
+    enc.decode(model)

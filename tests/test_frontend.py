@@ -1,0 +1,83 @@
+"""jaxpr -> DFG frontend."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cgra import CGRA
+from repro.core.frontend import trace_loop_body
+from repro.core.mapper import MapperConfig, map_loop
+
+
+def test_trace_simple_body_semantics():
+    def body(i, acc):
+        x = i * 3 + acc
+        y = x ^ (x >> 2)
+        return (y & 0x7FFF,)
+
+    g, cm = trace_loop_body(body, n_carry=1)
+    hist, _ = g.execute(6)
+    acc = 0
+    for i in range(6):
+        x = i * 3 + acc
+        acc = (x ^ (x >> 2)) & 0x7FFF
+        assert hist[i][cm[0]] == acc
+
+
+def test_trace_select_and_compare():
+    def body(i, acc):
+        c = i > 3
+        v = jnp.where(c, acc + 1, acc - 1)
+        return (v,)
+
+    g, cm = trace_loop_body(body, n_carry=1)
+    hist, _ = g.execute(8)
+    acc = 0
+    for i in range(8):
+        acc = acc + 1 if i > 3 else acc - 1
+        assert hist[i][cm[0]] == acc
+
+
+def test_trace_with_loads_and_store():
+    def body(i, a):   # a is a per-iteration loaded value
+        return a * 2 + i,   # single non-carry output -> store
+
+    g, _ = trace_loop_body(body, n_carry=0, loads=1)
+    ops = [n.op for n in g.nodes.values()]
+    assert "load" in ops and "store" in ops
+    mem = {100 + i: i + 5 for i in range(4)}   # load base is 100
+    hist, out_mem = g.execute(4, mem=mem)
+    for i in range(4):
+        assert out_mem[1000 + i] == (i + 5) * 2 + i
+
+
+def test_traced_body_maps_to_cgra():
+    def body(i, acc):
+        return ((acc + i) & 0xFF,)
+
+    g, _ = trace_loop_body(body, n_carry=1)
+    r = map_loop(g, CGRA(2, 2), MapperConfig(solver="z3", timeout_s=30))
+    assert r.success
+
+
+def test_unsupported_primitive_raises():
+    def body(i, acc):
+        return (jnp.sin(acc.astype(jnp.float32)).astype(jnp.int32),)
+
+    with pytest.raises(NotImplementedError):
+        trace_loop_body(body, n_carry=1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 7), st.integers(0, 63), st.integers(1, 5))
+def test_property_trace_matches_python(mul, mask, sh):
+    def body(i, acc):
+        x = i * mul + acc
+        return ((x >> sh) & mask,)
+
+    g, cm = trace_loop_body(body, n_carry=1)
+    hist, _ = g.execute(5)
+    acc = 0
+    for i in range(5):
+        acc = ((i * mul + acc) >> sh) & mask
+        assert hist[i][cm[0]] == acc

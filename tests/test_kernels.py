@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.clause_eval import true_counts
+from repro.kernels.clause_eval.ref import true_counts_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+# ------------------------------------------------------------ clause_eval
+@pytest.mark.parametrize("c,l,v,b", [
+    (17, 3, 33, 4), (333, 7, 97, 11), (1025, 2, 250, 1), (64, 12, 64, 16),
+])
+def test_clause_eval_matches_ref(c, l, v, b):
+    rng = np.random.RandomState(c + l)
+    cvars = jnp.asarray(rng.randint(0, v + 1, (c, l)), jnp.int32)
+    csign = jnp.asarray(rng.rand(c, l) > 0.5)
+    assign = jnp.asarray(rng.rand(b, v + 1) > 0.5)
+    got = true_counts(cvars, csign, assign)
+    want = true_counts_ref(cvars, csign, assign)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_eval_on_real_instance():
+    from repro.core.cgra import CGRA
+    from repro.core.dfg import running_example
+    from repro.core.encode import encode
+    from repro.core.sat.walksat_jax import pack_cnf
+    enc = encode(running_example(), CGRA(2, 2), 3)
+    packed = pack_cnf(enc.cnf)
+    rng = np.random.RandomState(0)
+    assign = jnp.asarray(rng.rand(4, enc.cnf.n_vars + 1) > 0.5)
+    got = true_counts(packed.cvars, packed.csign.astype(bool), assign)
+    want = true_counts_ref(packed.cvars, packed.csign.astype(bool), assign)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d,window", [
+    (2, 4, 2, 256, 256, 64, 0),
+    (1, 2, 1, 200, 200, 32, 0),      # unaligned seq -> padding path
+    (2, 4, 4, 128, 384, 64, 0),      # decode-ish: kv longer than q
+    (1, 2, 2, 256, 256, 64, 64),     # sliding window
+    (1, 8, 2, 128, 128, 128, 0),     # GQA group 4
+])
+def test_flash_matches_ref(b, hq, hkv, sq, sk, d, window):
+    rng = np.random.RandomState(hq * sq)
+    q = jnp.asarray(rng.randn(b, hq, sq, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hkv, sk, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hkv, sk, d), jnp.float32)
+    off = sk - sq
+    got = flash_attention(q, k, v, causal=True, window=window, q_offset=off)
+    want = attention_ref(q, k, v, causal=True, window=window, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16():
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    got = flash_attention(q, k, v)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+# --------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 3, 16, 8, 64),
+    (1, 128, 2, 8, 4, 128),
+    (1, 200, 1, 4, 4, 64),           # unaligned seq -> padding path
+    (2, 64, 4, 32, 16, 16),
+])
+def test_ssd_scan_matches_sequential_ref(b, s, h, p, n, chunk):
+    rng = np.random.RandomState(s + h)
+    x = jnp.asarray(rng.randn(b, s, h, p), jnp.float32)
+    dt = jnp.asarray(rng.rand(b, s, h) * 0.5, jnp.float32)
+    A_log = jnp.asarray(rng.rand(h), jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    D = jnp.asarray(rng.rand(h), jnp.float32)
+    got = ssd_scan(x, dt, A_log, B, C, D, chunk=chunk)
+    want = ssd_ref(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=2e-3, rtol=2e-3)
+
+
+def test_layers_ssd_chunked_matches_sequential_ref():
+    from repro.models.layers import ssd_chunked
+    rng = np.random.RandomState(3)
+    b, s, h, p, n = 2, 96, 2, 8, 8
+    x = jnp.asarray(rng.randn(b, s, h, p), jnp.float32)
+    dt = jnp.asarray(rng.rand(b, s, h) * 0.5, jnp.float32)
+    A_log = jnp.asarray(rng.rand(h), jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    D = jnp.asarray(rng.rand(h), jnp.float32)
+    got = ssd_chunked(x, dt, A_log, B, C, D, chunk=32)   # 96 % 32 == 0
+    want = ssd_ref(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)

@@ -1,0 +1,105 @@
+"""End-to-end mapping: Fig. 3 loop, register allocation, simulator checks,
+the SAT-vs-heuristic comparison (the paper's headline), and routing."""
+import pytest
+
+from repro.core import suite
+from repro.core.baseline import BaselineConfig, map_heuristic
+from repro.core.cgra import CGRA
+from repro.core.dfg import running_example
+from repro.core.mapper import MapperConfig, map_loop
+from repro.core.regalloc import allocate
+from repro.core.simulator import (emit_code, execute_mapping, static_check,
+                                  verify_mapping)
+
+FAST = MapperConfig(solver="z3", timeout_s=90)
+
+
+def test_running_example_maps_at_ii3_on_2x2():
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), FAST)
+    assert r.success and r.ii == 3 == r.mii    # paper Fig. 2c
+
+
+def test_mapping_validated_by_simulator():
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), FAST)
+    chk = verify_mapping(g, CGRA(2, 2), r.placement, r.ii, n_iters=8)
+    assert chk.ok, chk.errors
+
+
+def test_simulator_catches_bad_placement():
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), FAST)
+    bad = dict(r.placement)
+    # move one node to a different cycle — some invariant must break
+    n0 = next(iter(bad))
+    p, c, it = bad[n0]
+    bad[n0] = (p, (c + 1) % r.ii, it)
+    chk = verify_mapping(g, CGRA(2, 2), bad, r.ii)
+    assert not chk.ok
+
+
+def test_regalloc_within_limit():
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), FAST)
+    ra = allocate(g, CGRA(2, 2), r.placement, r.ii)
+    assert ra.ok
+    assert ra.max_pressure <= 4
+
+
+def test_regalloc_fails_with_zero_registers():
+    g = running_example()
+    cgra = CGRA(2, 2, n_regs=0)
+    r = map_loop(g, cgra, FAST)
+    # with zero local registers either a bypass-only mapping exists at a
+    # larger II, or the mapper keeps iterating — II must grow past MII
+    if r.success:
+        assert r.ii >= r.mii
+
+
+@pytest.mark.parametrize("name", ["srand", "bitcount", "gsm"])
+def test_suite_kernels_map_on_3x3(name):
+    g = suite.get(name)
+    r = map_loop(g, CGRA(3, 3), FAST)
+    assert r.success
+    assert r.ii >= r.mii
+
+
+def test_sat_not_worse_than_heuristic():
+    """The paper's headline: SAT explores the space at least as well."""
+    cgra = CGRA(4, 4)
+    for name in ["sha", "srand", "nw"]:
+        g = suite.get(name)
+        rs = map_loop(g, cgra, FAST)
+        rh = map_heuristic(g, cgra, BaselineConfig(n_restarts=10,
+                                                   timeout_s=60))
+        assert rs.success
+        if rh.success:
+            assert rs.ii <= rh.ii
+
+
+def test_routing_insertion_can_reduce_ii():
+    """Beyond-paper: splicing route nodes lifts the paper's limitation."""
+    g = suite.get("gsm")
+    cgra = CGRA(4, 4)
+    base = map_loop(g, cgra, FAST)
+    routed = map_loop(g, cgra, MapperConfig(
+        solver="z3", routing=True, max_route_nodes=4, timeout_s=120))
+    assert routed.success
+    assert routed.ii <= base.ii
+
+
+def test_emit_code_covers_all_nodes():
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), FAST)
+    code = emit_code(g, CGRA(2, 2), r.placement, r.ii)
+    placed = [n for row in code.kernel for n in row if n is not None]
+    assert sorted(placed) == sorted(g.nodes)
+    assert code.n_stages == 2
+
+
+def test_attempt_log_records_iterative_ii():
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), FAST)
+    assert [a.ii for a in r.attempts] == [3]
+    assert r.attempts[-1].status == "SAT"

@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis) on the mapper's invariants."""
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.cgra import CGRA
+from repro.core.dfg import DFG
+from repro.core.encode import encode
+from repro.core.mapper import MapperConfig, map_loop
+from repro.core.regalloc import _cyclic_overlap
+from repro.core.sat import SAT, solve
+from repro.core.schedule import asap_alap, build_kms, min_ii
+from repro.core.simulator import verify_mapping
+
+OPS = ["add", "sub", "mul", "xor", "and", "or", "min", "max"]
+
+
+@st.composite
+def random_dfg(draw):
+    """Small random executable DFGs with optional loop-carried edges."""
+    n = draw(st.integers(4, 12))
+    g = DFG("rand")
+    g.add("iv")
+    g.add("const", imm=draw(st.integers(1, 100)))
+    for i in range(2, n):
+        op = draw(st.sampled_from(OPS))
+        a = draw(st.integers(0, i - 1))
+        b = draw(st.integers(0, i - 1))
+        g.add(op, [(a, 0), (b, 0)])
+    # a couple of back-edges to later nodes (loop-carried accumulators)
+    for _ in range(draw(st.integers(0, 2))):
+        dst = draw(st.integers(2, n - 1))
+        src = draw(st.integers(dst, n - 1))
+        slot = draw(st.integers(0, 1))
+        ins = list(g.nodes[dst].ins)
+        ins[slot] = (src, draw(st.integers(1, 2)))
+        g.nodes[dst].ins = tuple(ins)
+    g.validate()
+    return g
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_dfg())
+def test_random_dfgs_map_and_simulate(g):
+    """Any mapping the loop returns must pass simulator verification
+    (verify_mapping is called inside map_loop and raises otherwise)."""
+    cgra = CGRA(3, 3)
+    r = map_loop(g, cgra, MapperConfig(solver="z3", timeout_s=30, max_ii=12))
+    if r.success:
+        assert r.ii >= min_ii(g, cgra)
+        chk = verify_mapping(g, cgra, r.placement, r.ii, n_iters=7)
+        assert chk.ok, chk.errors
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_dfg(), st.integers(2, 6))
+def test_kms_candidates_cover_windows(g, ii):
+    asap, alap, length = asap_alap(g)
+    kms = build_kms(g, ii)
+    for nid in g.nodes:
+        times = sorted(kms.flat_time(c, it) for c, it in kms.candidates[nid])
+        assert times == list(range(asap[nid], alap[nid] + 1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_dfg())
+def test_sat_decode_satisfies_static_invariants(g):
+    """A SAT model decoded into a placement always passes C1/C2/C3 checks."""
+    from repro.core.simulator import static_check
+    cgra = CGRA(3, 3)
+    ii = min_ii(g, cgra)
+    enc = encode(g, cgra, ii)
+    status, model = solve(enc.cnf, "z3")
+    if status == SAT:
+        placement = enc.decode(model)
+        chk = static_check(g, cgra, placement, ii)
+        assert chk.ok, chk.errors
+
+
+@given(st.integers(2, 12), st.data())
+def test_cyclic_overlap_matches_bruteforce(ii, data):
+    sa = data.draw(st.integers(0, ii - 1))
+    la = data.draw(st.integers(1, ii))
+    sb = data.draw(st.integers(0, ii - 1))
+    lb = data.draw(st.integers(1, ii))
+    cover_a = {(sa + i) % ii for i in range(la)}
+    cover_b = {(sb + i) % ii for i in range(lb)}
+    expect = bool(cover_a & cover_b)
+    assert _cyclic_overlap((sa, la), (sb, lb), ii) == expect
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_dfg(), st.integers(1, 6), st.integers(1, 12))
+def test_execute_wraps_consistently(g, iters, seed):
+    """DFG.execute is deterministic and independent of call count."""
+    h1, m1 = g.execute(iters, mem={0: seed})
+    h2, m2 = g.execute(iters, mem={0: seed})
+    assert h1 == h2 and m1 == m2

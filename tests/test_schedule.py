@@ -1,0 +1,75 @@
+"""Schedules (ASAP/ALAP/MS/KMS) — validated against the paper's Fig. 4/5."""
+import pytest
+
+from repro.core.cgra import CGRA
+from repro.core.dfg import running_example
+from repro.core.schedule import (KMS, asap_alap, build_kms, min_ii,
+                                 mobility_schedule, rec_mii, res_mii)
+
+
+def names(g):
+    return {n.id: n.name for n in g.nodes.values()}
+
+
+def test_fig4_asap_alap():
+    g = running_example()
+    asap, alap, L = asap_alap(g)
+    nm = names(g)
+    assert L == 5
+    by_asap = {}
+    for nid, t in asap.items():
+        by_asap.setdefault(t, set()).add(nm[nid])
+    assert by_asap[0] == {"n1", "n2", "n3", "n4"}
+    assert by_asap[1] == {"n5", "n7", "n10"}
+    assert by_asap[2] == {"n6", "n11"}
+    assert by_asap[3] == {"n8"}
+    assert by_asap[4] == {"n9"}
+    by_alap = {}
+    for nid, t in alap.items():
+        by_alap.setdefault(t, set()).add(nm[nid])
+    assert by_alap[0] == {"n3"}
+    assert by_alap[1] == {"n4", "n5"}
+    assert by_alap[2] == {"n1", "n6", "n7"}
+    assert by_alap[3] == {"n2", "n8", "n10"}
+    assert by_alap[4] == {"n9", "n11"}
+
+
+def test_fig4_mobility_schedule():
+    g = running_example()
+    nm = names(g)
+    ms = mobility_schedule(g)
+    rows = [sorted(nm[n] for n in row) for row in ms]
+    assert rows[0] == sorted(["n1", "n2", "n3", "n4"])
+    assert rows[1] == sorted(["n1", "n2", "n4", "n5", "n7", "n10"])
+    assert rows[2] == sorted(["n1", "n2", "n6", "n7", "n10", "n11"])
+    assert rows[3] == sorted(["n2", "n8", "n10", "n11"])
+    assert rows[4] == sorted(["n9", "n11"])
+
+
+def test_fig5_kms_folding():
+    g = running_example()
+    kms = build_kms(g, 3)
+    assert kms.n_folds == 2            # ceil(5/3), as in the paper
+    # every candidate (c, it) reconstructs a flat time within the window
+    for nid, cands in kms.candidates.items():
+        for c, it in cands:
+            t = kms.flat_time(c, it)
+            assert kms.asap[nid] <= t <= kms.alap[nid]
+            assert 0 <= c < 3
+    # rows partition all (node, window-slot) pairs
+    total = sum(len(r) for r in kms.rows())
+    expect = sum(kms.alap[n] - kms.asap[n] + 1 for n in g.nodes)
+    assert total == expect
+
+
+def test_mii_running_example():
+    g = running_example()
+    assert res_mii(g, CGRA(2, 2)) == 3   # 11 nodes / 4 PEs
+    assert rec_mii(g) == 2               # cycle n10 -> n11 -> n10, dist 1
+    assert min_ii(g, CGRA(2, 2)) == 3    # paper's II for the 2x2 example
+
+
+def test_mem_constrained_res_mii():
+    g = running_example()
+    cgra = CGRA(2, 2, mem_pes=(0,))
+    assert res_mii(g, cgra) >= 3
