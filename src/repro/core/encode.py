@@ -63,9 +63,45 @@ class Encoding:
         return placement
 
 
+@dataclass
+class _Layout:
+    """II-independent clause structure shared by every II of a session.
+
+    The KMS candidate set of a node is ``{(t % II, t // II) : t in
+    [asap, alap]}`` — the underlying *flat times* t do not depend on II, so
+    one variable per (node, PE, flat time) covers every candidate II with
+    identical numbering. C1 (exactly-one per node) ranges over exactly those
+    variables and is therefore II-independent too; it is built once here and
+    its clause tuples are shared (not copied) into every per-II CNF. C2's
+    skeleton — which variables share a (PE, flat-time) slot — is also fixed;
+    only the fold ``t % II`` that merges slots changes per II.
+    """
+    var_of_t: Dict[Tuple[int, int, int], int]      # (node, pe, t) -> var
+    info_t: List[Tuple[int, int, int]]             # var-1 -> (node, pe, t)
+    by_pt: Dict[Tuple[int, int], List[int]]        # (pe, t) -> vars
+    pt_keys: List[Tuple[int, int]]                 # insertion-ordered keys
+    c1_clauses: List[Tuple[int, ...]]
+    n_vars: int                                    # layout vars + C1 aux
+    n_c1: int
+
+
 class EncoderSession:
     """Holds II-independent precomputation (windows, allowed PEs, neighbour
-    tables) so the Fig. 3 iterative loop re-encodes only what II changes."""
+    tables, and the full C1/variable layout) so the Fig. 3 iterative loop —
+    and the parallel II-sweep engine in ``sweep.py`` — re-derive only the
+    II-dependent C2 fold and C3 timing windows per candidate II.
+
+    Incremental-encoding contract (relied on by ``sweep.py``):
+      * variable numbering is identical for every II of one session (one var
+        per (node, allowed PE, flat mobility time), created in a fixed
+        order), so models/phase hints are comparable across IIs;
+      * ``encode(ii)`` never mutates shared state — each call returns a
+        fresh ``Encoding`` whose CNF shares the C1 clause *tuples* but owns
+        its clause list, so concurrent solvers may consume them freely;
+      * with the "sequential" (Sinz) AMO, C1 auxiliary variables live in the
+        shared prefix and C2 auxiliaries are allocated per II *after* it, so
+        the shared numbering is still stable.
+    """
 
     def __init__(self, dfg: DFG, cgra: CGRA, amo: str = "pairwise"):
         dfg.validate()
@@ -82,63 +118,95 @@ class EncoderSession:
         self.consumers: List[List[int]] = [
             sorted({p} | set(cgra.neighbors(p))) for p in range(cgra.n_pes)
         ]
+        # dst PE -> frozenset of src PEs that can feed it
+        self.reach_from: List[frozenset] = [
+            frozenset(ps for ps in range(cgra.n_pes) if cgra.reachable(ps, pd))
+            for pd in range(cgra.n_pes)
+        ]
+        self._layout: Optional[_Layout] = None
+
+    # --------------------------------------------------- II-independent part
+    def _ensure_layout(self) -> _Layout:
+        if self._layout is not None:
+            return self._layout
+        dfg = self.dfg
+        base = CNF()
+        var_of_t: Dict[Tuple[int, int, int], int] = {}
+        info_t: List[Tuple[int, int, int]] = []
+        by_node: Dict[int, List[int]] = {}
+        by_pt: Dict[Tuple[int, int], List[int]] = {}
+        # one var per (node, allowed PE, flat mobility time); creation order
+        # (node, then time, then PE) matches the historical per-II encoder,
+        # because KMS candidates enumerate the same flat times in order.
+        for nid in dfg.nodes:
+            lits = []
+            for t in range(self.asap[nid], self.alap[nid] + 1):
+                for p in self.allowed_pes[nid]:
+                    v = base.new_var()
+                    var_of_t[(nid, p, t)] = v
+                    info_t.append((nid, p, t))
+                    lits.append(v)
+                    by_pt.setdefault((p, t), []).append(v)
+            by_node[nid] = lits
+        # C1: exactly one position per node (Eq. 1) — II-independent
+        for nid, lits in by_node.items():
+            if not lits:
+                # node has no legal PE at any II -> trivially UNSAT
+                base.add_clause([])
+                continue
+            base.exactly_one(lits, self.amo)
+        self._layout = _Layout(
+            var_of_t=var_of_t, info_t=info_t, by_pt=by_pt,
+            pt_keys=list(by_pt), c1_clauses=base.clauses,
+            n_vars=base.n_vars, n_c1=base.n_clauses)
+        return self._layout
 
     # ---------------------------------------------------------------- build
     def encode(self, ii: int) -> Encoding:
         dfg, cgra = self.dfg, self.cgra
+        lay = self._ensure_layout()
         kms = build_kms(dfg, ii)
+
         cnf = CNF()
-        var_of: Dict[Tuple[int, int, int, int], int] = {}
-        info: Dict[int, Lit] = {}
+        cnf.n_vars = lay.n_vars
+        cnf.clauses = list(lay.c1_clauses)   # shared tuples, fresh list
+        n_c1 = lay.n_c1
 
-        # literal creation: one var per (node, allowed PE, KMS candidate)
-        by_node: Dict[int, List[int]] = {}
-        by_slot: Dict[Tuple[int, int], List[int]] = {}  # (p, c) -> vars
-        for nid in dfg.nodes:
-            lits = []
-            for c, it in kms.candidates[nid]:
-                for p in self.allowed_pes[nid]:
-                    v = cnf.new_var()
-                    var_of[(nid, p, c, it)] = v
-                    info[v] = Lit(nid, p, c, it)
-                    lits.append(v)
-                    by_slot.setdefault((p, c), []).append(v)
-            by_node[nid] = lits
-
-        n_c1 = cnf.n_clauses
-        # C1: exactly one literal per node (Eq. 1)
-        for nid, lits in by_node.items():
-            if not lits:
-                # node has no legal position at this II -> trivially UNSAT
-                cnf.add_clause([])
-                continue
-            cnf.exactly_one(lits, self.amo)
-        n_c1 = cnf.n_clauses - n_c1
+        var_of: Dict[Tuple[int, int, int, int], int] = {
+            (n, p, t % ii, t // ii): v
+            for (n, p, t), v in lay.var_of_t.items()}
+        info: Dict[int, Lit] = {
+            v + 1: Lit(n, p, t % ii, t // ii)
+            for v, (n, p, t) in enumerate(lay.info_t)}
 
         n_c2 = cnf.n_clauses
-        # C2: at most one node per (PE, kernel cycle) (Eq. 2)
-        for (p, c), lits in by_slot.items():
+        # C2: at most one node per (PE, kernel cycle) (Eq. 2) — fold the
+        # precomputed (PE, flat-time) slot skeleton by t % II
+        by_slot: Dict[Tuple[int, int], List[int]] = {}
+        for (p, t) in lay.pt_keys:
+            by_slot.setdefault((p, t % ii), []).extend(lay.by_pt[(p, t)])
+        for lits in by_slot.values():
             cnf.at_most_one(lits, self.amo)
         n_c2 = cnf.n_clauses - n_c2
 
         n_c3 = cnf.n_clauses
-        # C3: per-edge implication clauses (Eq. 3/4/5 window)
+        # C3: per-edge implication clauses (Eq. 3/4/5 window) — the only
+        # clause family whose structure depends on II
+        var_of_t = lay.var_of_t
         for src, dst, delta in dfg.edges():
             lo = 1 - delta * ii
             hi = (1 - delta) * ii
-            # index src literals by (c, it) for the scan below
-            src_cands = kms.candidates[src]
+            src_times = range(self.asap[src], self.alap[src] + 1)
             src_pes = self.allowed_pes[src]
-            for cd, itd in kms.candidates[dst]:
-                td = kms.flat_time(cd, itd)
-                ok_times = [(cs, its) for cs, its in src_cands
-                            if lo <= td - kms.flat_time(cs, its) <= hi]
+            for td in range(self.asap[dst], self.alap[dst] + 1):
+                ok_times = [ts for ts in src_times if lo <= td - ts <= hi]
                 for pd in self.allowed_pes[dst]:
-                    w = var_of[(dst, pd, cd, itd)]
-                    support = [var_of[(src, ps, cs, its)]
-                               for cs, its in ok_times
+                    w = var_of_t[(dst, pd, td)]
+                    reach = self.reach_from[pd]
+                    support = [var_of_t[(src, ps, ts)]
+                               for ts in ok_times
                                for ps in src_pes
-                               if cgra.reachable(ps, pd)]
+                               if ps in reach]
                     cnf.add_clause([-w] + support)
         n_c3 = cnf.n_clauses - n_c3
 

@@ -153,8 +153,20 @@ def _route_candidates(dfg: DFG) -> List[Tuple[int, int, int]]:
 
 
 def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
-             ) -> MappingResult:
+             sweep_width: int = 1) -> MappingResult:
+    """Find the minimal feasible II.
+
+    ``sweep_width=1`` is the paper-faithful sequential reference (this
+    function's body). ``sweep_width>1`` delegates to the parallel II-sweep
+    engine (``repro.core.sweep``), which encodes a window of candidate IIs
+    through one shared EncoderSession and solves them concurrently —
+    returning the same II as the sequential path. Routing retries
+    (``cfg.routing``) are sequential-only and force ``sweep_width=1``.
+    """
     cfg = cfg or MapperConfig()
+    if sweep_width > 1 and not cfg.routing:
+        from .sweep import map_sweep   # local import: sweep imports us
+        return map_sweep(dfg, cgra, cfg, sweep_width=sweep_width)
     dfg.validate()
     t_start = time.time()
     deadline = t_start + cfg.timeout_s

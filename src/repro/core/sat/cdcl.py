@@ -9,9 +9,20 @@ the reference for the JAX portfolio's UNSAT certification.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..cnf import CNF
+
+
+def solve_clauses_worker(n_vars: int, clauses: List[Tuple[int, ...]],
+                         ) -> Tuple[str, Optional[List[bool]]]:
+    """Process-pool entry point for the sweep portfolio: rebuilds the CNF
+    from picklable primitives and solves it. Lives here (not portfolio.py)
+    so spawn-started workers import only this light, jax-free module."""
+    cnf = CNF()
+    cnf.n_vars = n_vars
+    cnf.clauses = [tuple(c) for c in clauses]
+    return CDCLSolver(cnf).solve()
 
 
 def _luby(x: int) -> int:
@@ -199,7 +210,12 @@ class CDCLSolver:
     # ---------------------------------------------------------------- main
     def solve(self, max_conflicts: Optional[int] = None,
               phase_hint: Optional[List[bool]] = None,
+              stop: Optional[Callable[[], bool]] = None,
               ) -> Tuple[str, Optional[List[bool]]]:
+        """``stop`` is a cooperative cancellation hook (polled every few
+        hundred loop iterations); when it returns True the search aborts
+        with UNKNOWN. Used by the sweep portfolio to kill higher-II
+        attempts once a lower II wins."""
         from . import SAT, UNSAT, UNKNOWN
         if not self.ok:
             return UNSAT, None
@@ -214,7 +230,11 @@ class CDCLSolver:
         conflicts = 0
         restart_idx = 1
         budget = 100 * _luby(restart_idx)
+        ticks = 0
         while True:
+            ticks += 1
+            if stop is not None and ticks % 256 == 0 and stop():
+                return UNKNOWN, None
             confl = self._propagate()
             if confl is not None:
                 conflicts += 1

@@ -1,7 +1,27 @@
-"""Mapper-search portfolio.
+"""Mapper-search portfolio: single-instance racing and window solving.
 
-On real hardware the probSAT batch is sharded across the mesh with
-shard_map — each device runs an independent slice of chains (different
+``solve_portfolio`` is the per-instance portfolio (incomplete sharded
+probSAT first, complete solver for the UNSAT certificate) — deterministic
+for a fixed seed because the two legs run sequentially.
+
+``solve_window`` is the engine room of the parallel II-sweep
+(``repro.core.sweep``): it takes the CNFs of a window of candidate IIs and
+solves them concurrently —
+
+  * the complete backend runs on every candidate, lowest II first — our
+    CDCL in a persistent fork-started process pool (real parallelism for
+    the UNSAT proofs; CPython threads would serialise on the GIL), z3 (which
+    releases the GIL inside check()) on a thread pool when importable;
+  * one staged racer thread runs the *batched* WalkSAT
+    (``solve_walksat_window``), which vmaps restarts across all candidates
+    on the clause tensors, so the JAX leg certifies hard SAT instances
+    while the complete leg grinds on the proofs;
+  * per-candidate stop events implement early cancellation: the caller's
+    ``accept`` callback may kill all higher-II work the moment a lower II
+    returns SAT + regalloc-OK.
+
+On real hardware the probSAT batch is additionally sharded across the mesh
+with shard_map — each device runs an independent slice of chains (different
 seeds/noise), an all_reduce(max) on the solved flag elects a winner, and the
 host falls back to a complete solver only for the UNSAT certificate. On this
 CPU container the same code path runs with a single device; the structure is
@@ -9,7 +29,15 @@ identical.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import multiprocessing
+import os
+import threading
+import time
+import warnings
+from concurrent.futures import (FIRST_COMPLETED, ProcessPoolExecutor,
+                                ThreadPoolExecutor, wait as futures_wait)
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -19,22 +47,319 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..cnf import CNF
 
+CANCELLED = "CANCELLED"
+
+# ------------------------------------------------------------- process pool
+# CPython's GIL serialises the pure-Python CDCL, so concurrent UNSAT proofs
+# inside one process gain nothing from threads. The window solver therefore
+# runs the CDCL leg in a small persistent process pool; z3 releases the GIL
+# and stays on threads. Fork context: spawn would re-execute unguarded
+# parent scripts' module level in every worker, and the workers only ever
+# run the dependency-free CDCL (never JAX/XLA), which is fork-safe. The
+# pool is created lazily and reused across windows. Non-Linux hosts without
+# fork fall back to threads transparently.
+_PROC_POOL: Optional[ProcessPoolExecutor] = None
+_PROC_POOL_BROKEN = False
+_PROC_POOL_COOLDOWN_UNTIL = 0.0
+
+
+def _proc_pool() -> Optional[ProcessPoolExecutor]:
+    global _PROC_POOL, _PROC_POOL_BROKEN
+    if _PROC_POOL_BROKEN:
+        return None
+    if _PROC_POOL is None and time.time() < _PROC_POOL_COOLDOWN_UNTIL:
+        # a pool was just torn down (deadline kill); an unjoined racer
+        # thread may still be draining its last XLA chunk, and forking
+        # while it runs is the hazard the pre-fork below exists to avoid.
+        # Callers fall back to threads for this brief window.
+        return None
+    if _PROC_POOL is None:
+        # jax warns that fork + its internal threads can deadlock the child;
+        # our workers run only the dependency-free pure-Python CDCL and
+        # never call back into XLA, so that hazard doesn't apply — silence
+        # the specific warning rather than scare every sweep user
+        warnings.filterwarnings(
+            "ignore", message=r"os\.fork\(\) was called",
+            category=RuntimeWarning)
+        try:
+            n = max(2, os.cpu_count() or 2)
+            pool = ProcessPoolExecutor(
+                max_workers=n,
+                mp_context=multiprocessing.get_context("fork"))
+            # Pre-fork every worker NOW, while no racer thread is mid-XLA:
+            # lazy forking in a later window could otherwise snapshot a
+            # walksat thread holding runtime locks. sleep() keeps all n
+            # tasks occupied long enough that n distinct workers spawn.
+            futures_wait([pool.submit(time.sleep, 0.05) for _ in range(n)])
+            _PROC_POOL = pool
+        except Exception:
+            _PROC_POOL_BROKEN = True
+            return None
+    return _PROC_POOL
+
+
+def _reset_pool() -> None:
+    """Tear down the pool, killing any still-running proofs, so a window
+    that blew its deadline cannot starve the next map's windows. The next
+    sweep lazily builds a fresh pool (after a short cooldown that lets any
+    leaked racer thread drain before we fork again)."""
+    global _PROC_POOL, _PROC_POOL_COOLDOWN_UNTIL
+    pool, _PROC_POOL = _PROC_POOL, None
+    _PROC_POOL_COOLDOWN_UNTIL = time.time() + 2.0
+    if pool is None:
+        return
+    try:
+        for p in list(getattr(pool, "_processes", {}).values()):
+            p.terminate()
+        pool.shutdown(wait=False, cancel_futures=True)
+    except Exception:
+        pass
+
 
 def solve_portfolio(cnf: CNF, *, seed: int = 0, steps: int = 8192,
                     chains_per_device: int = 32,
+                    stop: Optional[Callable[[], bool]] = None,
                     ) -> Tuple[str, Optional[List[bool]]]:
-    """Incomplete sharded search first, complete solver as fallback."""
+    """Incomplete sharded search first, complete solver as fallback.
+
+    Deterministic for a fixed seed: the WalkSAT leg either certifies SAT
+    (same model every run — jax PRNG is seed-deterministic) or the complete
+    leg decides; there is no wall-clock race in this single-instance path.
+    """
     from . import SAT, UNKNOWN
     from .walksat_jax import solve_walksat
     from . import solve as solve_any
 
     n_dev = jax.device_count()
     status, model = solve_walksat(
-        cnf, seed=seed, steps=steps, batch=chains_per_device * n_dev)
+        cnf, seed=seed, steps=steps, batch=chains_per_device * n_dev,
+        stop=stop)
     if status == SAT:
         return status, model
     # complete fallback (z3 if available, else our CDCL)
-    return solve_any(cnf, method="auto")
+    return solve_any(cnf, method="auto", stop=stop)
+
+
+@dataclass
+class WindowResult:
+    """Outcome of one candidate in a window solve."""
+    status: str                      # SAT | UNSAT | UNKNOWN | CANCELLED
+    model: Optional[List[bool]]
+    via: str                         # "cdcl" | "z3" | "walksat" | "cancel" ...
+    # elapsed time from window start to this candidate's delivery — i.e.
+    # queueing + solving, NOT the solver's own runtime (candidates share
+    # a worker pool; a 0.1s solve that waited 5s reports 5.1s)
+    solve_time: float
+
+
+def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
+                 use_walksat: Optional[bool] = None, walksat_steps: int = 8192,
+                 walksat_batch: int = 24, walksat_delay: float = 0.75,
+                 max_workers: Optional[int] = None,
+                 deadline: Optional[float] = None,
+                 accept: Optional[Callable[[int, List[bool]], bool]] = None,
+                 ) -> List[WindowResult]:
+    """Solve a window of K CNFs (candidate IIs, ascending) concurrently.
+
+    ``accept(i, model)`` is invoked under the window lock whenever candidate
+    ``i`` is certified SAT; returning True declares it a winner and cancels
+    every candidate above it (their results become CANCELLED). Candidates
+    *below* a winner always run to completion, so the caller can still
+    identify the minimal feasible II. ``deadline`` (absolute time.time())
+    aborts outstanding work with UNKNOWN.
+
+    The batched-WalkSAT racer is *staged*: it sleeps for ``walksat_delay``
+    seconds and starts walking only if the complete leg hasn't already
+    resolved the window — easy windows (the common case on small kernels)
+    never pay for it, hard SAT instances still get cracked while CDCL/z3
+    grinds on the proofs.
+    """
+    from . import SAT, UNKNOWN, resolve_method, solve as solve_any
+
+    K = len(cnfs)
+    t0 = time.time()
+    results: List[Optional[WindowResult]] = [None] * K
+    stops = [threading.Event() for _ in range(K)]
+    closed = threading.Event()
+    lock = threading.Lock()
+    if method == "portfolio":   # portfolio semantics == complete + racer
+        method, use_walksat = "auto", True
+    method = resolve_method(method)
+    complete = method in ("z3", "cdcl")
+    if use_walksat is None:
+        use_walksat = True
+
+    def past_deadline() -> bool:
+        return deadline is not None and time.time() > deadline
+
+    def deliver(i: int, status: str, model, via: str) -> None:
+        with lock:
+            if closed.is_set() or results[i] is not None:
+                return
+            accepted = False
+            if status == SAT and accept is not None:
+                accepted = accept(i, model)
+                if not accepted and via == "walksat" and complete:
+                    # provisional: an incomplete-leg model that fails the
+                    # caller's acceptance (e.g. regalloc) must not decide
+                    # this candidate — the complete backend may yet produce
+                    # a model that passes, which is exactly what the
+                    # sequential reference would have judged. Leave the
+                    # candidate open for the complete leg.
+                    return
+            results[i] = WindowResult(status, model, via, time.time() - t0)
+            stops[i].set()
+            if accepted:
+                for j in range(i + 1, K):
+                    stops[j].set()
+
+    def run_complete(i: int) -> None:
+        if stops[i].is_set() or past_deadline():
+            return
+        status, model = solve_any(
+            cnfs[i], method=method, seed=seed,
+            stop=lambda: stops[i].is_set() or past_deadline())
+        if status == UNKNOWN and (stops[i].is_set() or past_deadline()):
+            return   # cancelled / timed out; filled in at the end
+        deliver(i, status, model, method)
+
+    def run_walksat() -> None:
+        # staged start: no work at all if the complete leg wins the window
+        # (or the deadline passes) inside the grace period
+        if closed.wait(min(walksat_delay,
+                           max(0.0, (deadline or 1e18) - time.time()))):
+            return
+        if past_deadline():
+            return
+        from .walksat_jax import solve_walksat_window
+        try:
+            solve_walksat_window(
+                cnfs, seed=seed, steps=walksat_steps, batch=walksat_batch,
+                stop=lambda: past_deadline() or all(
+                    s.is_set() for s in stops),
+                should_skip=lambda i: stops[i].is_set(),
+                on_sat=lambda i, model: deliver(i, SAT, model, "walksat"))
+        except Exception:   # incomplete leg must never take down the window
+            pass
+
+    def _start_racer() -> None:
+        # Racer thread, deliberately not joined later: JAX compiled
+        # computations release the GIL, so the racer (when its staged delay
+        # elapses) genuinely overlaps the complete leg; when the window
+        # resolves first, ``closed`` turns any late walksat delivery into a
+        # no-op and the thread drains at its next stop poll instead of
+        # stalling our return by up to one XLA compile. Non-daemon so
+        # interpreter shutdown waits for the drain rather than tearing down
+        # XLA under a live computation. Started only after the process-pool
+        # submissions so worker forks never overlap fresh XLA work.
+        if use_walksat and complete:
+            threading.Thread(target=run_walksat, daemon=False).start()
+
+    def run_complete_procs(futs: dict) -> None:
+        """CDCL leg on the process pool: real parallelism for the UNSAT
+        proofs. ``futs`` were submitted before the racer thread started so
+        the workers fork before any new XLA work begins in this process."""
+        global _PROC_POOL, _PROC_POOL_BROKEN
+        abandoned = set()
+        while True:
+            with lock:
+                pending = [i for i in range(K)
+                           if results[i] is None and i not in abandoned]
+            if not pending or past_deadline():
+                break
+            done, _ = futures_wait([futs[i] for i in pending], timeout=0.1,
+                                   return_when=FIRST_COMPLETED)
+            idx_of = {id(futs[i]): i for i in pending}
+            for f in done:
+                i = idx_of.get(id(f))
+                if i is None:
+                    continue
+                try:
+                    status, model = f.result()
+                except Exception:
+                    # worker died (e.g. spawn unsupported under this
+                    # parent): never report UNKNOWN for a decidable
+                    # instance — solve it in-process instead, and stop
+                    # using the pool
+                    _PROC_POOL_BROKEN, _PROC_POOL = True, None
+                    run_complete(i)
+                    continue
+                deliver(i, status, model, method)
+            # reap candidates cancelled by an accept() (or solved by the
+            # racer): dequeue what we can, abandon what is already running
+            # (its eventual result is discarded by the closed/result check)
+            for i in range(K):
+                if i in abandoned or i not in futs:
+                    continue
+                with lock:
+                    dead = stops[i].is_set() and results[i] is None
+                    solved_elsewhere = results[i] is not None
+                if dead or solved_elsewhere:
+                    if not futs[i].done():
+                        futs[i].cancel()
+                    if dead:
+                        abandoned.add(i)
+        # deadline break: dequeue whatever hasn't started yet; if proofs
+        # are still *running* past the deadline, kill the whole pool —
+        # workers have no cooperative stop, and a doomed unbounded UNSAT
+        # proof would otherwise starve every later map's windows
+        leftovers = False
+        for f in futs.values():
+            if not f.done() and not f.cancel():
+                leftovers = True
+        if leftovers and past_deadline():
+            _reset_pool()
+
+    def submit_procs() -> Optional[dict]:
+        """Submit the window to the process pool (forking workers now,
+        before the racer thread may touch XLA). None => pool unusable."""
+        global _PROC_POOL, _PROC_POOL_BROKEN
+        pool = _proc_pool()
+        if pool is None:
+            return None
+        from .cdcl import solve_clauses_worker
+        try:
+            return {i: pool.submit(solve_clauses_worker,
+                                   cnfs[i].n_vars, cnfs[i].clauses)
+                    for i in range(K)}
+        except Exception:
+            _PROC_POOL_BROKEN, _PROC_POOL = True, None
+            return None
+
+    if complete:
+        futs = submit_procs() if method == "cdcl" else None
+        _start_racer()
+        if futs is not None:
+            run_complete_procs(futs)
+        else:
+            # z3 (releases the GIL inside check()) — or the fallback when
+            # the process pool is unavailable: a small thread pool, lowest
+            # II first
+            workers = max_workers or max(1, min(K, (os.cpu_count() or 2)))
+            with ThreadPoolExecutor(max_workers=workers) as tpool:
+                list(tpool.map(run_complete, range(K)))
+    else:
+        # incomplete-only window (method == "walksat")
+        from .walksat_jax import solve_walksat_window
+        ws = solve_walksat_window(
+            cnfs, seed=seed, steps=walksat_steps, batch=walksat_batch,
+            stop=past_deadline, should_skip=lambda i: stops[i].is_set(),
+            on_sat=lambda i, model: deliver(i, SAT, model, "walksat"))
+        for i, (status, model) in enumerate(ws):
+            if status != SAT:      # SAT already delivered via on_sat
+                deliver(i, status, model, "walksat")
+
+    with lock:
+        closed.set()
+        for i in range(K):
+            stops[i].set()   # ensure the racer's stop poll fires promptly
+            if results[i] is None:
+                via = "cancel" if stops[i].is_set() and not past_deadline() \
+                    else "deadline"
+                results[i] = WindowResult(
+                    CANCELLED if via == "cancel" else UNKNOWN,
+                    None, via, time.time() - t0)
+    return results   # type: ignore[return-value]
 
 
 def sharded_chain_batch(n_vars: int, chains_per_device: int, seed: int,

@@ -81,9 +81,8 @@ def true_counts_batch(packed: PackedCNF, assign: jnp.ndarray,
     return jax.vmap(lambda a: true_counts_ref(packed, a))(assign)
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def _run_chains(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
-                steps: int, cb: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _chains_core(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
+                 steps: int, cb: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """probSAT chains. assign0: [B, V+1] bool. Returns (solved [B], assign)."""
 
     def clause_sat(assign):                       # [V+1] -> [C] int32
@@ -134,8 +133,144 @@ def _run_chains(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
     return solved, assign
 
 
+_run_chains = jax.jit(_chains_core, static_argnums=(3, 4))
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+def _run_chains_window(cvars: jnp.ndarray, csign: jnp.ndarray,
+                       ovars: jnp.ndarray, osign: jnp.ndarray,
+                       n_vars: int, steps: int, cb: float,
+                       assign0: jnp.ndarray, keys: jnp.ndarray,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """vmapped probSAT over a *window* of K CNFs (one per candidate II).
+
+    cvars/csign: [K, C, Lmax]; ovars/osign: [K, V+1, Omax];
+    assign0: [K, B, V+1]; keys: [K, 2]. Returns (solved [K, B], assign).
+    """
+    def one(cv, cs, ov, os_, a0, k):
+        packed = PackedCNF(cv, cs, ov, os_, n_vars, cv.shape[0])
+        return _chains_core(packed, a0, k, steps, cb)
+    return jax.vmap(one)(cvars, csign, ovars, osign, assign0, keys)
+
+
+def _bucket(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def pack_cnf_window(cnfs: List[CNF]) -> PackedCNF:
+    """Pack K CNFs into one stacked PackedCNF padded to common shapes.
+
+    Shorter clause lists are padded with the tautology clause (v1 ∨ ¬v1) —
+    always exactly one true literal, so padded rows are never selected as
+    unsat and never reach a solved flag. Padding rows are *excluded* from
+    the occurrence lists, so break counts and incremental true-count
+    updates are unaffected. Variable counts are padded to the max; extra
+    vars occur in no clause and are never flipped.
+
+    All dims are rounded up to coarse buckets so different windows (other
+    kernels, other CGRA sizes) reuse the same jitted computation instead of
+    paying a fresh XLA compile per instance shape.
+    """
+    packs = [pack_cnf(c) for c in cnfs]
+    K = len(packs)
+    V = _bucket(max(p.n_vars for p in packs), 128)
+    C = _bucket(max(p.n_clauses for p in packs), 1024)
+    L = max(p.cvars.shape[1] for p in packs)
+    O = max(p.ovars.shape[1] for p in packs)
+    L = _bucket(max(L, 2), 4)  # room for the (v1, ¬v1) padding tautology
+    O = _bucket(O, 8)
+    cvars = np.zeros((K, C, L), np.int32)
+    csign = np.zeros((K, C, L), bool)
+    ovars = np.full((K, V + 1, O), -1, np.int32)
+    osign = np.zeros((K, V + 1, O), bool)
+    for k, p in enumerate(packs):
+        c, l = p.cvars.shape
+        cvars[k, :c, :l] = np.asarray(p.cvars)
+        csign[k, :c, :l] = np.asarray(p.csign)
+        # tautology padding for clause rows [c, C)
+        cvars[k, c:, 0] = 1
+        cvars[k, c:, 1] = 1
+        csign[k, c:, 0] = True
+        csign[k, c:, 1] = False
+        v, o = p.ovars.shape
+        ovars[k, :v, :o] = np.asarray(p.ovars)
+        osign[k, :v, :o] = np.asarray(p.osign)
+    return PackedCNF(jnp.asarray(cvars), jnp.asarray(csign),
+                     jnp.asarray(ovars), jnp.asarray(osign), V, C)
+
+
+def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
+                         steps: int = 8192, batch: int = 24, cb: float = 2.3,
+                         stop=None, should_skip=None, on_sat=None,
+                         ) -> List[Tuple[str, Optional[List[bool]]]]:
+    """Batched probSAT across a window of candidate-II CNFs.
+
+    All K formulas walk concurrently inside one jitted computation (vmapped
+    restarts over the stacked clause tensors). Incomplete: per-CNF result is
+    SAT or UNKNOWN, never UNSAT (structurally-empty-clause CNFs excepted).
+
+    ``stop()`` aborts the whole window; ``should_skip(i)`` marks candidate i
+    as no longer interesting (e.g. its complete solver already finished);
+    ``on_sat(i, model)`` fires as soon as candidate i is certified, so the
+    caller can early-cancel other work while remaining candidates keep
+    walking.
+    """
+    from . import SAT, UNKNOWN, UNSAT
+    K = len(cnfs)
+    results: List[Tuple[str, Optional[List[bool]]]] = [(UNKNOWN, None)] * K
+    live = []
+    for i, cnf in enumerate(cnfs):
+        if any(len(c) == 0 for c in cnf.clauses):
+            results[i] = (UNSAT, None)
+        elif cnf.n_clauses == 0 or cnf.n_vars == 0:
+            results[i] = (SAT, [False] * cnf.n_vars)
+            if on_sat is not None:
+                on_sat(i, results[i][1])
+        else:
+            live.append(i)
+    if not live:
+        return results
+    packed = pack_cnf_window([cnfs[i] for i in live])
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    assign0 = jax.random.bernoulli(
+        k0, 0.5, (len(live), batch, packed.n_vars + 1))
+    # bound wall-time per chunk (stop/skip are only polled between chunks,
+    # and a cancelled racer must drain fast): fewer steps for big formulas
+    chunk = max(64, min(steps, 2048, 2_000_000 // max(packed.n_clauses, 1)))
+    done = 0
+    pending = set(range(len(live)))
+    while done < steps and pending:
+        if stop is not None and stop():
+            break
+        key, kc = jax.random.split(key)
+        keys = jax.random.split(kc, len(live))
+        solved, assign = _run_chains_window(
+            packed.cvars, packed.csign, packed.ovars, packed.osign,
+            packed.n_vars, chunk, cb, assign0, keys)
+        solved_np = np.asarray(solved)
+        for j in sorted(pending):
+            i = live[j]
+            if should_skip is not None and should_skip(i):
+                pending.discard(j)
+                continue
+            if not solved_np[j].any():
+                continue
+            row = int(np.argmax(solved_np[j]))
+            model = [bool(b) for b in
+                     np.asarray(assign[j, row])[1:cnfs[i].n_vars + 1]]
+            assert cnfs[i].check(model), "walksat returned a non-model"
+            results[i] = (SAT, model)
+            pending.discard(j)
+            if on_sat is not None:
+                on_sat(i, model)
+        assign0 = assign
+        done += chunk
+    return results
+
+
 def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
-                  batch: int = 64, cb: float = 2.3,
+                  batch: int = 64, cb: float = 2.3, stop=None,
                   ) -> Tuple[str, Optional[List[bool]]]:
     from . import SAT, UNKNOWN, UNSAT
     if any(len(c) == 0 for c in cnf.clauses):
@@ -150,6 +285,8 @@ def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
     chunk = max(256, min(steps, 2048))
     done = 0
     while done < steps:
+        if stop is not None and stop():
+            return UNKNOWN, None
         key, kc = jax.random.split(key)
         solved, assign = _run_chains(packed, assign0, kc, chunk, cb)
         solved = np.asarray(solved)

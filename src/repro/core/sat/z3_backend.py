@@ -1,29 +1,43 @@
 """Z3 backend — the solver used in the paper's own experiments."""
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from ..cnf import CNF
 
 
 def solve_z3(cnf: CNF, timeout_ms: Optional[int] = None,
+             stop: Optional[Callable[[], bool]] = None,
              ) -> Tuple[str, Optional[List[bool]]]:
     import z3
     from . import SAT, UNSAT, UNKNOWN
 
+    if stop is not None and stop():
+        return UNKNOWN, None
     s = z3.Solver()
     if timeout_ms:
         s.set("timeout", timeout_ms)
+    elif stop is not None:
+        # cooperative cancellation: bounded solve slices, polling ``stop``
+        # between slices (z3 releases the GIL inside check(), so the sweep's
+        # watchdog thread can flip the event while we are solving)
+        s.set("timeout", 500)
     xs = [z3.Bool(f"x{v}") for v in range(cnf.n_vars + 1)]  # xs[0] unused
     for cl in cnf.clauses:
         if not cl:
             return UNSAT, None
         s.add(z3.Or(*[xs[l] if l > 0 else z3.Not(xs[-l]) for l in cl]))
-    res = s.check()
-    if res == z3.sat:
+
+    def model_of() -> List[bool]:
         m = s.model()
-        model = [z3.is_true(m[xs[v]]) for v in range(1, cnf.n_vars + 1)]
-        return SAT, model
-    if res == z3.unsat:
-        return UNSAT, None
-    return UNKNOWN, None
+        return [z3.is_true(m[xs[v]]) for v in range(1, cnf.n_vars + 1)]
+
+    while True:
+        res = s.check()
+        if res == z3.sat:
+            return SAT, model_of()
+        if res == z3.unsat:
+            return UNSAT, None
+        if stop is None or timeout_ms or stop():
+            return UNKNOWN, None
+        # else: slice expired without a verdict — keep solving

@@ -9,7 +9,7 @@ are always validated observationally against sequential semantics.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 from .dfg import DFG
 
@@ -33,6 +33,24 @@ def get(name: str) -> DFG:
 
 def all_dfgs() -> Dict[str, DFG]:
     return {n: get(n) for n in names()}
+
+
+def run_suite(cgra, cfg=None, sweep_width: int = 1,
+              names_subset: Optional[List[str]] = None) -> Dict[str, object]:
+    """Map every suite kernel on ``cgra`` and return {name: MappingResult}.
+
+    ``sweep_width=1`` runs the paper-faithful sequential Fig. 3 loop;
+    ``sweep_width>1`` runs the parallel II-sweep engine
+    (``repro.core.sweep``). The two modes find the same II on every kernel
+    (asserted by tests/test_sweep.py); this is the convenience entry point
+    for batch runs over the whole suite.
+    """
+    from .mapper import MapperConfig, map_loop
+    cfg = cfg or MapperConfig()
+    out: Dict[str, object] = {}
+    for name in (names_subset or names()):
+        out[name] = map_loop(get(name), cgra, cfg, sweep_width=sweep_width)
+    return out
 
 
 def _carry(g: DFG, nid: int, src: int, slot: int = 0, dist: int = 1) -> None:

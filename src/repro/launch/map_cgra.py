@@ -56,6 +56,9 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--cgra", default="4x4")
     ap.add_argument("--routing", action="store_true")
+    ap.add_argument("--sweep", type=int, default=0, metavar="K",
+                    help="also run the parallel II-sweep engine with window "
+                         "width K and report both modes side-by-side")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     cgra = cgra_from_name(args.cgra)
@@ -65,8 +68,18 @@ def main() -> None:
         r = map_loop(g, cgra, MapperConfig(
             solver="auto", timeout_s=60, routing=args.routing))
         status = f"II={r.ii} (MII={r.mii})" if r.success else "NO MAPPING"
-        print(f"  {name:16s} nodes={g.n:2d}  {status}  "
-              f"[{r.total_time:.2f}s, {len(r.attempts)} attempts]")
+        line = (f"  {name:16s} nodes={g.n:2d}  {status}  "
+                f"[seq {r.total_time:.2f}s, {len(r.attempts)} attempts]")
+        if args.sweep > 1:
+            g2, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
+                                    name=name)
+            rs = map_loop(g2, cgra, MapperConfig(solver="auto", timeout_s=60),
+                          sweep_width=args.sweep)
+            sstat = f"II={rs.ii}" if rs.success else "NO MAPPING"
+            line += f"  | sweep(k={args.sweep}) {sstat} [{rs.total_time:.2f}s]"
+            if rs.success and r.success and rs.ii != r.ii:
+                line += "  !! sweep/sequential II mismatch"
+        print(line)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+"""Deterministic fallback for the slice of the `hypothesis` API this suite
+uses, so property tests collect and run on hosts without the dependency.
+
+Test modules import it as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propshim import given, settings, strategies as st
+
+When real hypothesis is installed it wins (full shrinking, example
+database, health checks). The shim replays each `@given` test over a fixed
+number of pseudo-random examples seeded from the test name, so failures are
+reproducible run-to-run; set REPRO_PROPSHIM_EXAMPLES to change the example
+budget (default 8, capped below each test's own max_examples).
+"""
+from __future__ import annotations
+
+import os
+import random
+import zlib
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+_DEFAULT_EXAMPLES = int(os.environ.get("REPRO_PROPSHIM_EXAMPLES", "8"))
+
+
+class _Strategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any], desc: str):
+        self._draw_fn = draw_fn
+        self.desc = desc
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw_fn(rng)
+
+    def __repr__(self) -> str:
+        return f"strategy<{self.desc}>"
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(lo, hi), f"integers({lo},{hi})")
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def _sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))],
+                     f"sampled_from({len(items)})")
+
+
+def _lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(n)]
+    return _Strategy(draw, f"lists({elem.desc})")
+
+
+class _DataObject:
+    """The object produced by ``st.data()``: interactive mid-test draws."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str = "") -> Any:
+        return strategy.draw(self._rng)
+
+
+def _data() -> _Strategy:
+    return _Strategy(lambda rng: _DataObject(rng), "data")
+
+
+def _composite(fn: Callable) -> Callable[..., _Strategy]:
+    """``@st.composite`` — fn's first arg is the draw function."""
+    def make(*args, **kwargs) -> _Strategy:
+        def draw(rng: random.Random):
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+        return _Strategy(draw, f"composite:{fn.__name__}")
+    return make
+
+
+strategies = SimpleNamespace(
+    integers=_integers, booleans=_booleans, sampled_from=_sampled_from,
+    lists=_lists, data=_data, composite=_composite)
+
+# decorator-level alias so `@st.composite` works via the namespace
+st = strategies
+
+HealthCheck = SimpleNamespace(
+    too_slow="too_slow", data_too_large="data_too_large",
+    filter_too_much="filter_too_much")
+
+
+def settings(**kwargs) -> Callable:
+    """Records max_examples on the decorated (given-wrapped) test; every
+    other hypothesis knob (deadline, suppress_health_check, ...) is a
+    no-op here."""
+    def deco(fn: Callable) -> Callable:
+        fn._propshim_settings = kwargs
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        def wrapper():
+            cfg = getattr(wrapper, "_propshim_settings", {})
+            budget = min(int(cfg.get("max_examples", _DEFAULT_EXAMPLES)),
+                         _DEFAULT_EXAMPLES)
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for ex in range(max(budget, 1)):
+                seed = seed0 * 100003 + ex
+                rng = random.Random(seed)
+                args = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {ex} "
+                        f"(seed {seed}): args={args!r}") from e
+        # NOTE: plain attribute copy, not functools.wraps — wraps() sets
+        # __wrapped__ and pytest would then see the original signature and
+        # demand fixtures named after the strategy parameters.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_shim = True
+        return wrapper
+    return deco

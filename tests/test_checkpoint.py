@@ -44,6 +44,7 @@ def test_interrupted_write_is_invisible(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 1
 
 
+@pytest.mark.slow
 def test_crash_resume_is_bitwise_exact(tmp_path):
     """Train 12 steps with a crash at 8 + resume == train 12 uninterrupted.
     This is the end-to-end fault-tolerance contract."""

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import given, settings, strategies as st
 
 from repro.core.cgra import CGRA
 from repro.core.frontend import trace_loop_body
@@ -56,7 +59,7 @@ def test_traced_body_maps_to_cgra():
         return ((acc + i) & 0xFF,)
 
     g, _ = trace_loop_body(body, n_carry=1)
-    r = map_loop(g, CGRA(2, 2), MapperConfig(solver="z3", timeout_s=30))
+    r = map_loop(g, CGRA(2, 2), MapperConfig(solver="auto", timeout_s=30))
     assert r.success
 
 

@@ -11,7 +11,9 @@ from repro.core.regalloc import allocate
 from repro.core.simulator import (emit_code, execute_mapping, static_check,
                                   verify_mapping)
 
-FAST = MapperConfig(solver="z3", timeout_s=90)
+# "auto" = z3 (the paper's solver) when importable, else the in-repo CDCL —
+# the tests must run (and stay green) on hosts without z3 installed
+FAST = MapperConfig(solver="auto", timeout_s=90)
 
 
 def test_running_example_maps_at_ii3_on_2x2():
@@ -84,7 +86,7 @@ def test_routing_insertion_can_reduce_ii():
     cgra = CGRA(4, 4)
     base = map_loop(g, cgra, FAST)
     routed = map_loop(g, cgra, MapperConfig(
-        solver="z3", routing=True, max_route_nodes=4, timeout_s=120))
+        solver="auto", routing=True, max_route_nodes=4, timeout_s=120))
     assert routed.success
     assert routed.ii <= base.ii
 

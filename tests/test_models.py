@@ -30,6 +30,7 @@ def _batch(cfg, key, B=2, S=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_arch_smoke_train_step(arch):
     """Reduced same-family config: one train step, finite loss, shapes."""
@@ -52,8 +53,10 @@ def test_arch_smoke_train_step(arch):
                    for a, b in zip(leaves1, leaves2))
 
 
-@pytest.mark.parametrize("arch", ["yi_34b", "hymba_1_5b", "mamba2_370m",
-                                  "deepseek_moe_16b"])
+@pytest.mark.parametrize("arch", [
+    pytest.param("yi_34b", marks=pytest.mark.slow),
+    "hymba_1_5b", "mamba2_370m",
+    pytest.param("deepseek_moe_16b", marks=pytest.mark.slow)])
 def test_arch_smoke_decode_step(arch):
     cfg = get_config(arch).smoke()
     mesh = make_host_mesh()
@@ -67,6 +70,7 @@ def test_arch_smoke_decode_step(arch):
         assert np.isfinite(np.asarray(lg, np.float32)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen1_5_32b", "mamba2_370m", "hymba_1_5b"])
 def test_decode_matches_forward(arch):
     """Token-by-token decode must reproduce the full forward logits —
@@ -105,6 +109,7 @@ def test_blockwise_attention_matches_naive():
                                    atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_sort_equals_einsum():
     cfg = get_config("deepseek_moe_16b").smoke().replace(
         capacity_factor=8.0, moe_group=64, dtype="float32")
@@ -169,9 +174,10 @@ def test_rmsnorm_custom_vjp_matches_autodiff():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_loss_decreases_on_learnable_data():
     from repro.data.pipeline import DataConfig, SyntheticLM
     from repro.launch.train import train_loop
     cfg = get_config("minitron_8b").smoke()
-    out = train_loop(cfg, steps=30, global_batch=8, seq_len=32, log_every=0)
+    out = train_loop(cfg, steps=80, global_batch=8, seq_len=32, log_every=0)
     assert out["loss"] < np.log(cfg.vocab)   # better than uniform

@@ -41,6 +41,8 @@ def test_prefill_then_decode_matches_scratch(arch):
                                    np.asarray(b[:, :, :cfg.vocab]),
                                    atol=2e-3, rtol=2e-3)
 
+pytestmark = pytest.mark.slow
+
 
 def test_prefill_cache_with_kv_quant():
     cfg = get_config("qwen1_5_32b").smoke().replace(dtype="float32",

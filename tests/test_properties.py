@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on the mapper's invariants."""
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import HealthCheck, given, settings, strategies as st
 
 from repro.core.cgra import CGRA
 from repro.core.dfg import DFG
@@ -45,7 +48,7 @@ def test_random_dfgs_map_and_simulate(g):
     """Any mapping the loop returns must pass simulator verification
     (verify_mapping is called inside map_loop and raises otherwise)."""
     cgra = CGRA(3, 3)
-    r = map_loop(g, cgra, MapperConfig(solver="z3", timeout_s=30, max_ii=12))
+    r = map_loop(g, cgra, MapperConfig(solver="auto", timeout_s=30, max_ii=12))
     if r.success:
         assert r.ii >= min_ii(g, cgra)
         chk = verify_mapping(g, cgra, r.placement, r.ii, n_iters=7)
@@ -71,7 +74,7 @@ def test_sat_decode_satisfies_static_invariants(g):
     cgra = CGRA(3, 3)
     ii = min_ii(g, cgra)
     enc = encode(g, cgra, ii)
-    status, model = solve(enc.cnf, "z3")
+    status, model = solve(enc.cnf, "auto")
     if status == SAT:
         placement = enc.decode(model)
         chk = static_check(g, cgra, placement, ii)

@@ -12,6 +12,7 @@ from repro.models.model import LM
 from repro.optim import adamw
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_single_shot():
     """accum_steps=4 must produce the same update as accum_steps=1."""
     cfg = get_config("qwen1_5_32b").smoke().replace(dtype="float32")
@@ -33,6 +34,7 @@ def test_grad_accumulation_matches_single_shot():
                                    atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_quality():
     """kv_quant decode must stay distributionally close to bf16 cache."""
     cfg = get_config("qwen1_5_32b").smoke().replace(dtype="float32")

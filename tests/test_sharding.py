@@ -1,6 +1,9 @@
 """Sharding plans and spec helpers."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import given, settings, strategies as st
 
 from repro.models.sharding import AttnPlan, pad_to, plan_attention
 
