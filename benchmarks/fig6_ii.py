@@ -1,11 +1,20 @@
 """Paper Fig. 6 reproduction + sweep-engine comparison.
 
 Per benchmark x CGRA size (2x2 .. 5x5) this reports the II found by
-  * the sequential SAT-MapIt Fig. 3 loop (``map_loop``, sweep_width=1),
+  * the sequential SAT-MapIt Fig. 3 loop with the incremental
+    assumption-based solver core (``map_loop``, sweep_width=1, the
+    default ``incremental=True``),
+  * the same loop with the core disabled (``incremental=False`` — the
+    paper-faithful cold encode+solve per II, the PR 1 reference),
   * the parallel II-sweep engine (``map_loop`` with sweep_width=k), and
   * the heuristic SoA stand-in,
 with per-mode wall-clock, side-by-side. Lower II is better; None means no
-mapping found within budget (the paper's black/red marks).
+mapping found within budget (the paper's black/red marks). ``summarize()``
+additionally asserts the incremental core's II is never worse than the
+cold path's (``inc_ii_le_cold_cells``) and aggregates per-kernel time for
+all three SAT modes. ``--amo=sequential`` switches both modes to the Sinz
+at-most-one encoding; the AMO clause-count table printed up front compares
+its size against the paper's pairwise encoding.
 
 The sweep engine must find an II <= the sequential mode's II on every cell
 (they are equivalent searches; <= rather than == only because a timeout can
@@ -41,8 +50,25 @@ def _warmup(sweep_width: int) -> None:
              sweep_width=sweep_width)
 
 
+def amo_clause_report(names=None) -> Dict[str, Dict[str, int]]:
+    """Clause counts of both AMO encodings (the paper's pairwise vs the
+    Sinz sequential) per kernel at MII on a 4x4 — the Sinz encoding turns
+    the O(k^2) binary at-most-one clauses into O(k) ternary ones."""
+    from repro.core.encode import encode
+    from repro.core.schedule import min_ii
+    out: Dict[str, Dict[str, int]] = {}
+    cgra = CGRA(4, 4)
+    for name in names or suite.names():
+        g = suite.get(name)
+        mii = max(min_ii(g, cgra), 1)
+        out[name] = {amo: encode(g, cgra, mii, amo).stats["clauses"]
+                     for amo in ("pairwise", "sequential")}
+    return out
+
+
 def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
-        routing: bool = False, sweep_width: int = 4) -> Dict:
+        routing: bool = False, sweep_width: int = 4,
+        amo: str = "pairwise") -> Dict:
     names = names or suite.names()
     _warmup(sweep_width)
     out: Dict[str, Dict] = {}
@@ -53,8 +79,17 @@ def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
             g = suite.get(name)
             t0 = time.time()
             rs = map_loop(g, cgra, MapperConfig(
-                solver="auto", timeout_s=timeout_s, routing=routing))
+                solver="auto", timeout_s=timeout_s, routing=routing,
+                amo=amo))
             t_sat = time.time() - t0
+            t0 = time.time()
+            # the cold reference: same sequential Fig. 3 loop with the
+            # incremental assumption-based core disabled (fresh encode +
+            # cold solve per II — exactly the PR 1 path)
+            rc = map_loop(suite.get(name), cgra, MapperConfig(
+                solver="auto", timeout_s=timeout_s, routing=routing,
+                amo=amo, incremental=False))
+            t_cold = time.time() - t0
             g2 = suite.get(name)
             t0 = time.time()
             # routing must match the sequential config: with routing=True
@@ -62,16 +97,18 @@ def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
             # so the sweep_ii <= sat_ii invariant is never an artefact of
             # comparing a routed search against an unrouted one
             rw = map_loop(g2, cgra, MapperConfig(
-                solver="auto", timeout_s=timeout_s, routing=routing),
-                sweep_width=sweep_width)
+                solver="auto", timeout_s=timeout_s, routing=routing,
+                amo=amo), sweep_width=sweep_width)
             t_sweep = time.time() - t0
             t0 = time.time()
             rh = map_heuristic(g, cgra, BaselineConfig(
                 n_restarts=heuristic_restarts, timeout_s=timeout_s))
             t_heur = time.time() - t0
             out[f"{name}/{size}"] = {
-                "sat_ii": rs.ii, "sweep_ii": rw.ii, "heur_ii": rh.ii,
+                "sat_ii": rs.ii, "cold_ii": rc.ii, "sweep_ii": rw.ii,
+                "heur_ii": rh.ii,
                 "sat_time": round(t_sat, 3),
+                "cold_time": round(t_cold, 3),
                 "sweep_time": round(t_sweep, 3),
                 "heur_time": round(t_heur, 3),
                 "mii": rs.mii,
@@ -85,6 +122,7 @@ def summarize(results: Dict) -> Dict:
     equivalence and wall-clock comparison (aggregated per kernel)."""
     better = worse = equal = sat_only = heur_only = 0
     sweep_ii_le = sweep_ii_gt = 0
+    inc_ii_le = inc_ii_gt = 0
     per_kernel: Dict[str, Dict[str, float]] = {}
     for k, v in results.items():
         si, hi = v["sat_ii"], v["heur_ii"]
@@ -105,11 +143,21 @@ def summarize(results: Dict) -> Dict:
             sweep_ii_le += 1
         else:
             sweep_ii_gt += 1
+        # incremental (sat_ii) vs the cold reference: the assumption-based
+        # core must never report a worse II than the cold path
+        ci = v.get("cold_ii")
+        if ci is None or (si is not None and si <= ci):
+            inc_ii_le += 1
+        else:
+            inc_ii_gt += 1
         kernel = k.split("/")[0]
-        agg = per_kernel.setdefault(kernel, {"sat": 0.0, "sweep": 0.0})
+        agg = per_kernel.setdefault(kernel,
+                                    {"sat": 0.0, "cold": 0.0, "sweep": 0.0})
         agg["sat"] += v["sat_time"]
+        agg["cold"] += v.get("cold_time", 0.0)
         agg["sweep"] += v.get("sweep_time", 0.0)
     sweep_faster = [k for k, a in per_kernel.items() if a["sweep"] < a["sat"]]
+    inc_faster = [k for k, a in per_kernel.items() if a["sat"] < a["cold"]]
     n = len(results)
     return {"cells": n, "sat_better": better, "sat_only_found": sat_only,
             "equal": equal, "sat_worse": worse, "heur_only_found": heur_only,
@@ -117,25 +165,35 @@ def summarize(results: Dict) -> Dict:
                 100.0 * (better + sat_only) / max(n, 1), 2),
             "sweep_ii_le_cells": sweep_ii_le,
             "sweep_ii_gt_cells": sweep_ii_gt,
+            "inc_ii_le_cold_cells": inc_ii_le,
+            "inc_ii_gt_cold_cells": inc_ii_gt,
             "kernels": len(per_kernel),
             "sweep_faster_kernels": sorted(sweep_faster),
             "sweep_faster_kernel_count": len(sweep_faster),
+            "inc_faster_kernels": sorted(inc_faster),
+            "inc_faster_kernel_count": len(inc_faster),
             "per_kernel_time": {k: {m: round(t, 3) for m, t in a.items()}
                                 for k, a in sorted(per_kernel.items())}}
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, amo: str = "pairwise") -> None:
     names = ["sha", "gsm", "srand", "bitcount", "nw"] if quick else None
+    print("AMO clause counts (pairwise vs Sinz sequential, at MII on 4x4):")
+    for name, counts in amo_clause_report(names).items():
+        print(f"  {name:10s} pairwise={counts['pairwise']:6d} "
+              f"sequential={counts['sequential']:6d}")
     res = run(timeout_s=30 if quick else 120, names=names,
-              heuristic_restarts=10 if quick else 30)
-    print("benchmark/size,mii,sat_ii,sweep_ii,heur_ii,"
-          "sat_time_s,sweep_time_s,heur_time_s")
+              heuristic_restarts=10 if quick else 30, amo=amo)
+    print("benchmark/size,mii,sat_ii,cold_ii,sweep_ii,heur_ii,"
+          "sat_time_s,cold_time_s,sweep_time_s,heur_time_s")
     for k, v in res.items():
-        print(f"{k},{v['mii']},{v['sat_ii']},{v['sweep_ii']},{v['heur_ii']},"
-              f"{v['sat_time']},{v['sweep_time']},{v['heur_time']}")
+        print(f"{k},{v['mii']},{v['sat_ii']},{v['cold_ii']},{v['sweep_ii']},"
+              f"{v['heur_ii']},{v['sat_time']},{v['cold_time']},"
+              f"{v['sweep_time']},{v['heur_time']}")
     print(json.dumps(summarize(res), indent=1))
 
 
 if __name__ == "__main__":
     import sys
-    main(quick="--quick" in sys.argv)
+    amo = "sequential" if "--amo=sequential" in sys.argv else "pairwise"
+    main(quick="--quick" in sys.argv, amo=amo)

@@ -1,21 +1,30 @@
-"""CNF container + cardinality encodings.
+"""CNF containers + cardinality encodings.
 
 Variables are positive ints (DIMACS convention); a literal is ±var. The
 paper's C1 uses the naive pairwise at-most-one (its Eq. 1 ``M(n)`` set); we
 also provide the Sinz sequential encoding as a beyond-paper option — it turns
 O(k^2) binary clauses into O(k) ternary ones, which dominates encode time on
 big KMS instances.
+
+``IncrementalCNF`` is the layered container behind the assumption-based
+solver core: a shared *base* layer of unguarded clauses plus named delta
+layers whose clauses carry a fresh selector literal, so one persistent
+formula covers every candidate II of a sweep and "try II=k" is an
+assumption solve rather than a fresh encode.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Hashable, Iterable, List, Optional, Sequence, Tuple
 
 
 class CNF:
     def __init__(self):
         self.n_vars = 0
         self.clauses: List[Tuple[int, ...]] = []
+        # set when an empty clause is recorded: the formula is trivially
+        # UNSAT and every backend may (and should) fail fast on it
+        self.trivially_unsat = False
 
     def new_var(self) -> int:
         self.n_vars += 1
@@ -25,11 +34,14 @@ class CNF:
         return [self.new_var() for _ in range(k)]
 
     def add(self, *lits: int) -> None:
-        assert lits, "empty clause added directly (use add_false)"
+        assert lits, "empty clause added directly (use add_clause([]))"
         self.clauses.append(tuple(lits))
 
     def add_clause(self, lits: Sequence[int]) -> None:
-        self.clauses.append(tuple(lits))
+        lits = tuple(lits)
+        if not lits:
+            self.trivially_unsat = True
+        self.clauses.append(lits)
 
     # ------------------------------------------------------------ cardinality
     def at_least_one(self, lits: Sequence[int]) -> None:
@@ -79,3 +91,125 @@ class CNF:
             if not any((lit > 0) == assignment[abs(lit) - 1] for lit in cl):
                 return False
         return True
+
+
+@dataclass
+class _IncLayer:
+    selector: int                   # selector var guarding every clause
+    start: int                      # [start, end) slice of self.clauses
+    end: int
+    var_start: int                  # vars created before this layer
+    var_end: int
+
+
+class IncrementalCNF(CNF):
+    """Layered CNF for assumption-based incremental solving.
+
+    Clauses added outside any layer form the shared *base* (unguarded —
+    active in every solve). ``begin_layer(key)`` allocates a fresh selector
+    variable ``s``; until ``end_layer()`` every added clause ``C`` is stored
+    as ``C ∨ ¬s``, so the layer is inert unless the solve assumes ``s``.
+    Layers are never removed — a solver that keeps the whole formula loaded
+    retains every learned clause across layer switches, because assumptions
+    are decisions, not axioms: anything the solver derives is a consequence
+    of the (guarded) clause database alone and stays valid forever.
+
+    ``assumptions_for(key)`` activates exactly one layer (and explicitly
+    deactivates the others, so a solve is precisely base+delta regardless of
+    solver phase defaults); ``project(key)`` materialises the equivalent
+    plain :class:`CNF` for backends without assumption support (the batched
+    WalkSAT) and for cold-path equivalence checks.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._layers: Dict[Hashable, _IncLayer] = {}
+        self._open: Optional[_IncLayer] = None
+        self._open_key: Optional[Hashable] = None
+        self.n_base_vars = 0   # frozen at the first begin_layer()
+
+    # ------------------------------------------------------------- layers
+    def begin_layer(self, key: Hashable) -> int:
+        """Open delta layer ``key``; returns its selector variable."""
+        assert self._open is None, "nested layers are not supported"
+        assert key not in self._layers, f"layer {key!r} already encoded"
+        if not self._layers:
+            self.n_base_vars = self.n_vars
+        sel = self.new_var()
+        self._open = _IncLayer(selector=sel, start=len(self.clauses),
+                               end=len(self.clauses),
+                               var_start=self.n_vars, var_end=self.n_vars)
+        self._open_key = key
+        return sel
+
+    def end_layer(self) -> None:
+        assert self._open is not None, "no open layer"
+        self._open.end = len(self.clauses)
+        self._open.var_end = self.n_vars
+        self._layers[self._open_key] = self._open
+        self._open = None
+        self._open_key = None
+
+    def add_clause(self, lits: Sequence[int]) -> None:
+        lits = tuple(lits)
+        if self._open is not None:
+            # an empty clause inside a layer is not a global contradiction:
+            # it only forbids activating this layer, i.e. unit(¬selector)
+            self.clauses.append(lits + (-self._open.selector,))
+            return
+        assert not self._layers, "base is frozen once the first layer exists"
+        if not lits:
+            self.trivially_unsat = True
+        self.clauses.append(lits)
+
+    def add(self, *lits: int) -> None:
+        assert lits, "empty clause added directly (use add_clause([]))"
+        self.add_clause(lits)
+
+    # ------------------------------------------------------------ queries
+    def layer_keys(self) -> List[Hashable]:
+        return list(self._layers)
+
+    def has_layer(self, key: Hashable) -> bool:
+        return key in self._layers
+
+    def selector(self, key: Hashable) -> int:
+        return self._layers[key].selector
+
+    def assumptions_for(self, key: Hashable) -> List[int]:
+        """Assumption literals that activate exactly layer ``key``."""
+        on = self._layers[key].selector
+        return [on] + [-l.selector for k, l in self._layers.items()
+                       if k != key]
+
+    def layer_slice(self, key: Hashable) -> Tuple[int, int]:
+        lay = self._layers[key]
+        return lay.start, lay.end
+
+    def project(self, key: Hashable) -> CNF:
+        """Plain CNF equivalent to base + layer ``key`` (guards stripped).
+
+        Variable numbering is preserved (selector/other-layer variables
+        simply occur in no clause), so models are interchangeable with
+        assumption solves over the full formula.
+        """
+        assert self._open is None, "close the open layer before projecting"
+        lay = self._layers[key]
+        out = CNF()
+        out.n_vars = self.n_vars
+        base_end = min(l.start for l in self._layers.values())
+        for cl in self.clauses[:base_end]:
+            out.add_clause(cl)
+        sel = lay.selector
+        for cl in self.clauses[lay.start:lay.end]:
+            assert cl[-1] == -sel
+            out.add_clause(cl[:-1])
+        return out
+
+    def layer_stats(self, key: Hashable) -> Dict[str, int]:
+        lay = self._layers[key]
+        base_end = min(l.start for l in self._layers.values())
+        return {"vars": self.n_vars,
+                "base_clauses": base_end,
+                "delta_clauses": lay.end - lay.start,
+                "clauses": base_end + (lay.end - lay.start)}

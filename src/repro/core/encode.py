@@ -26,7 +26,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cgra import CGRA
-from .cnf import CNF
+from .cnf import CNF, IncrementalCNF
 from .dfg import DFG
 from .schedule import KMS, asap_alap, build_kms
 
@@ -161,6 +161,41 @@ class EncoderSession:
             n_vars=base.n_vars, n_c1=base.n_clauses)
         return self._layout
 
+    # ------------------------------------------- per-II clause generators
+    # Single source of truth for the II-dependent clause families: both
+    # the cold per-II encoder (encode) and the layered incremental one
+    # (IncrementalEncoding.ensure_ii) consume these, so cold/incremental
+    # equivalence is structural, not maintained by hand in two loops.
+    def c2_fold_groups(self, ii: int) -> List[List[Tuple[int, int]]]:
+        """Groups of (PE, flat-time) slot keys merged by the ``t % II``
+        fold — each group's variables share one kernel-cycle slot."""
+        lay = self._ensure_layout()
+        by_slot: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        for (p, t) in lay.pt_keys:
+            by_slot.setdefault((p, t % ii), []).append((p, t))
+        return list(by_slot.values())
+
+    def c3_clauses(self, ii: int):
+        """Yield C3 per-edge implication clauses (Eq. 3/4/5 window) for
+        ``ii`` — the only clause family whose structure depends on II."""
+        lay = self._ensure_layout()
+        var_of_t = lay.var_of_t
+        for src, dst, delta in self.dfg.edges():
+            lo = 1 - delta * ii
+            hi = (1 - delta) * ii
+            src_times = range(self.asap[src], self.alap[src] + 1)
+            src_pes = self.allowed_pes[src]
+            for td in range(self.asap[dst], self.alap[dst] + 1):
+                ok_times = [ts for ts in src_times if lo <= td - ts <= hi]
+                for pd in self.allowed_pes[dst]:
+                    w = var_of_t[(dst, pd, td)]
+                    reach = self.reach_from[pd]
+                    support = [var_of_t[(src, ps, ts)]
+                               for ts in ok_times
+                               for ps in src_pes
+                               if ps in reach]
+                    yield [-w] + support
+
     # ---------------------------------------------------------------- build
     def encode(self, ii: int) -> Encoding:
         dfg, cgra = self.dfg, self.cgra
@@ -182,32 +217,14 @@ class EncoderSession:
         n_c2 = cnf.n_clauses
         # C2: at most one node per (PE, kernel cycle) (Eq. 2) — fold the
         # precomputed (PE, flat-time) slot skeleton by t % II
-        by_slot: Dict[Tuple[int, int], List[int]] = {}
-        for (p, t) in lay.pt_keys:
-            by_slot.setdefault((p, t % ii), []).extend(lay.by_pt[(p, t)])
-        for lits in by_slot.values():
+        for group in self.c2_fold_groups(ii):
+            lits = [v for key in group for v in lay.by_pt[key]]
             cnf.at_most_one(lits, self.amo)
         n_c2 = cnf.n_clauses - n_c2
 
         n_c3 = cnf.n_clauses
-        # C3: per-edge implication clauses (Eq. 3/4/5 window) — the only
-        # clause family whose structure depends on II
-        var_of_t = lay.var_of_t
-        for src, dst, delta in dfg.edges():
-            lo = 1 - delta * ii
-            hi = (1 - delta) * ii
-            src_times = range(self.asap[src], self.alap[src] + 1)
-            src_pes = self.allowed_pes[src]
-            for td in range(self.asap[dst], self.alap[dst] + 1):
-                ok_times = [ts for ts in src_times if lo <= td - ts <= hi]
-                for pd in self.allowed_pes[dst]:
-                    w = var_of_t[(dst, pd, td)]
-                    reach = self.reach_from[pd]
-                    support = [var_of_t[(src, ps, ts)]
-                               for ts in ok_times
-                               for ps in src_pes
-                               if ps in reach]
-                    cnf.add_clause([-w] + support)
+        for cl in self.c3_clauses(ii):
+            cnf.add_clause(cl)
         n_c3 = cnf.n_clauses - n_c3
 
         enc = Encoding(cnf=cnf, kms=kms, cgra=cgra, dfg=dfg,
@@ -215,6 +232,113 @@ class EncoderSession:
         enc.stats = {"vars": cnf.n_vars, "clauses": cnf.n_clauses,
                      "c1": n_c1, "c2": n_c2, "c3": n_c3}
         return enc
+
+
+class IncrementalEncoding:
+    """One persistent layered formula covering every II of a session.
+
+    The II-independent structure — the (node, PE, flat-time) variable
+    layout, C1 exactly-one, and the *within-slot* part of C2 (two nodes on
+    the same (PE, flat time) collide at every II) — forms the unguarded
+    base layer of an :class:`IncrementalCNF`. Each candidate II adds one
+    delta layer guarded by a fresh selector literal:
+
+      * the C2 *fold*: at-most-one across distinct flat times that the
+        ``t % II`` fold merges into one kernel slot (for the pairwise AMO
+        this is exactly the cross-time pairs; for the Sinz AMO the whole
+        folded group is re-encoded in the layer, the base skeleton staying
+        as redundant-but-sound helper clauses);
+      * C3's per-edge timing windows for that II.
+
+    "Try II=k" is then ``solve(assumptions=assumptions_for(k))`` on the one
+    formula — no re-encode, and a solver that stays loaded keeps every
+    learned clause across the II bump (assumptions are decisions, not
+    axioms, so all learnt clauses remain globally valid).
+
+    Variable numbering of the layout prefix is identical to
+    ``EncoderSession.encode(ii)``'s, so models from assumption solves,
+    from per-II projections (``project(ii)``), and from the cold path are
+    all decoded by the same ``decode(ii, model)``.
+    """
+
+    def __init__(self, session: EncoderSession):
+        self.session = session
+        lay = session._ensure_layout()
+        self._lay = lay
+        inc = IncrementalCNF()
+        inc.n_vars = lay.n_vars
+        inc.clauses = list(lay.c1_clauses)       # shared tuples, fresh list
+        inc.trivially_unsat = any(not c for c in lay.c1_clauses)
+        self.n_c1 = lay.n_c1
+        # within-slot C2 skeleton: same (PE, flat-time) collisions hold at
+        # every II (t1 == t2  =>  t1 % ii == t2 % ii)
+        for key in lay.pt_keys:
+            inc.at_most_one(lay.by_pt[key], "pairwise")
+        self.inc = inc
+        self.n_base = inc.n_clauses
+
+    # ---------------------------------------------------------------- build
+    def ensure_ii(self, ii: int) -> int:
+        """Encode the delta layer for ``ii`` if absent; returns its selector."""
+        inc = self.inc
+        if inc.has_layer(ii):
+            return inc.selector(ii)
+        session, lay = self.session, self._lay
+        sel = inc.begin_layer(ii)
+        # C2 fold: slots merged by t % II (shared generator with the cold
+        # encoder — see EncoderSession.c2_fold_groups)
+        for group in session.c2_fold_groups(ii):
+            if len(group) <= 1:
+                continue
+            if session.amo == "pairwise":
+                # cross-time pairs only — within-slot pairs live in the base
+                for a in range(len(group)):
+                    for b in range(a + 1, len(group)):
+                        for u in lay.by_pt[group[a]]:
+                            for w in lay.by_pt[group[b]]:
+                                inc.add(-u, -w)
+            else:
+                # Sinz over the whole folded group (aux vars live in the
+                # layer); the base pairwise skeleton stays as redundant
+                # helper clauses
+                lits = [v for key in group for v in lay.by_pt[key]]
+                inc.at_most_one(lits, session.amo)
+        # C3 timing windows for this II, clauses guarded by the layer
+        # selector — same generator the cold encoder consumes
+        for cl in session.c3_clauses(ii):
+            inc.add_clause(cl)
+        inc.end_layer()
+        return sel
+
+    # -------------------------------------------------------------- queries
+    def assumptions(self, ii: int) -> List[int]:
+        self.ensure_ii(ii)
+        return self.inc.assumptions_for(ii)
+
+    def project(self, ii: int) -> CNF:
+        """Plain (unguarded) CNF for base + II's delta — for backends
+        without assumption support and for cold-path equivalence checks."""
+        self.ensure_ii(ii)
+        return self.inc.project(ii)
+
+    def stats_for(self, ii: int) -> Dict[str, int]:
+        self.ensure_ii(ii)
+        return self.inc.layer_stats(ii)
+
+    def decode(self, ii: int, model: Sequence[bool],
+               ) -> Dict[int, Tuple[int, int, int]]:
+        """Decode any model over (a prefix-compatible superset of) the
+        layout variables into {node: (pe, kernel cycle, iteration)}."""
+        placement: Dict[int, Tuple[int, int, int]] = {}
+        for v, (n, p, t) in enumerate(self._lay.info_t):
+            if model[v]:
+                if n in placement:
+                    raise ValueError(f"node {n} assigned twice")
+                placement[n] = (p, t % ii, t // ii)
+        missing = set(self.session.dfg.nodes) - set(placement)
+        if missing:
+            raise ValueError(f"unplaced nodes {sorted(missing)}")
+        return placement
 
 
 def encode(dfg: DFG, cgra: CGRA, ii: int, amo: str = "pairwise") -> Encoding:

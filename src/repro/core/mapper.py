@@ -22,9 +22,9 @@ from typing import Dict, List, Optional, Tuple
 
 from .cgra import CGRA
 from .dfg import DFG
-from .encode import EncoderSession, Encoding
+from .encode import EncoderSession
 from .regalloc import RegAllocResult, allocate
-from .sat import SAT, UNKNOWN, UNSAT, solve
+from .sat import SAT, solve
 from .schedule import min_ii
 from .simulator import verify_mapping
 
@@ -43,6 +43,11 @@ class MapperConfig:
     # heuristic placement at the same II — guides the search toward
     # structured assignments. CDCL backend only.
     warm_start: bool = False
+    # assumption-based incremental core: one persistent layered formula +
+    # live solver across the whole II sweep (learned-clause retention,
+    # WalkSAT warm starts). False = the cold encode+solve-per-II reference
+    # path (the paper-faithful Fig. 3 loop).
+    incremental: bool = True
 
 
 @dataclass
@@ -55,6 +60,11 @@ class IIAttempt:
     encode_time: float
     route_nodes: int = 0
     regalloc_ok: Optional[bool] = None
+    # incremental-core reuse statistics (None on the cold path)
+    via: str = ""                            # backend that decided this II
+    learned_retained: Optional[int] = None   # clauses carried into the solve
+    conflicts: Optional[int] = None          # conflicts spent on this II
+    warm_hamming: Optional[int] = None       # walksat init vs final model
 
 
 @dataclass
@@ -78,25 +88,55 @@ class MappingResult:
 
 def _try_ii(dfg: DFG, cgra: CGRA, ii: int, cfg: MapperConfig,
             deadline: float, attempts: List[IIAttempt], route_nodes: int = 0,
+            sess=None,
             ) -> Optional[Tuple[Dict[int, Tuple[int, int, int]], RegAllocResult]]:
-    t0 = time.time()
-    session = EncoderSession(dfg, cgra, cfg.amo)
-    enc = session.encode(ii)
-    t_enc = time.time() - t0
-    t0 = time.time()
-    hint = None
-    if cfg.warm_start and cfg.solver == "cdcl":
-        hint = _heuristic_phase_hint(dfg, cgra, enc, ii, cfg.seed)
-    status, model = solve(enc.cnf, cfg.solver, seed=cfg.seed,
-                          phase_hint=hint)
-    att = IIAttempt(ii=ii, n_vars=enc.stats["vars"],
-                    n_clauses=enc.stats["clauses"], status=status,
-                    solve_time=time.time() - t0, encode_time=t_enc,
-                    route_nodes=route_nodes)
-    attempts.append(att)
-    if status != SAT:
-        return None
-    placement = enc.decode(model)
+    """One Fig. 3 iteration. With ``sess`` (a persistent
+    ``repro.core.sat.portfolio.SolverSession``) the II is decided by an
+    assumption solve on the session's one live formula/solver; without it,
+    a fresh CNF is encoded and solved cold (the reference path)."""
+    if sess is not None:
+        t0 = time.time()
+        sess.ensure_ii(ii)
+        t_enc = time.time() - t0
+        st = sess.stats_for(ii)
+        t0 = time.time()
+        hint = None
+        if cfg.warm_start and sess.complete_method == "cdcl":
+            hint = _heuristic_phase_hint(
+                dfg, cgra, _session_var_of(sess, ii), st["vars"], ii,
+                cfg.seed)
+        status, model, stats = sess.solve_ii(ii, phase_hint=hint)
+        att = IIAttempt(ii=ii, n_vars=st["vars"], n_clauses=st["clauses"],
+                        status=status, solve_time=time.time() - t0,
+                        encode_time=t_enc, route_nodes=route_nodes,
+                        via=stats.via,
+                        learned_retained=stats.learned_retained,
+                        conflicts=stats.conflicts,
+                        warm_hamming=stats.warm_hamming)
+        attempts.append(att)
+        if status != SAT:
+            return None
+        placement = sess.enc.decode(ii, model)
+    else:
+        t0 = time.time()
+        session = EncoderSession(dfg, cgra, cfg.amo)
+        enc = session.encode(ii)
+        t_enc = time.time() - t0
+        t0 = time.time()
+        hint = None
+        if cfg.warm_start and cfg.solver == "cdcl":
+            hint = _heuristic_phase_hint(dfg, cgra, enc.var_of.get,
+                                         enc.cnf.n_vars, ii, cfg.seed)
+        status, model = solve(enc.cnf, cfg.solver, seed=cfg.seed,
+                              phase_hint=hint)
+        att = IIAttempt(ii=ii, n_vars=enc.stats["vars"],
+                        n_clauses=enc.stats["clauses"], status=status,
+                        solve_time=time.time() - t0, encode_time=t_enc,
+                        route_nodes=route_nodes)
+        attempts.append(att)
+        if status != SAT:
+            return None
+        placement = enc.decode(model)
     ra = allocate(dfg, cgra, placement, ii)
     att.regalloc_ok = ra.ok
     if not ra.ok:
@@ -104,20 +144,27 @@ def _try_ii(dfg: DFG, cgra: CGRA, ii: int, cfg: MapperConfig,
     return placement, ra
 
 
-def _heuristic_phase_hint(dfg: DFG, cgra: CGRA, enc: Encoding, ii: int,
-                          seed: int) -> Optional[list]:
+def _session_var_of(sess, ii: int):
+    """(n, p, c, it) -> var lookup over a SolverSession's shared layout."""
+    var_of_t = sess.enc.session._ensure_layout().var_of_t
+    return lambda key: var_of_t.get((key[0], key[1], key[3] * ii + key[2]))
+
+
+def _heuristic_phase_hint(dfg: DFG, cgra: CGRA, var_lookup, n_vars: int,
+                          ii: int, seed: int) -> Optional[list]:
     """Phase-saving seed for CDCL from one heuristic placement attempt at
     the same II (partial placements still help: unplaced nodes keep the
-    default phase)."""
+    default phase). ``var_lookup((n, p, c, it)) -> var or None`` abstracts
+    over cold encodings and the incremental session's shared layout."""
     import random
 
     from .baseline import _attempt
     placement = _attempt(dfg, cgra, ii, random.Random(seed), max_ejects=50)
     if placement is None:
         return None
-    hint = [False] * enc.cnf.n_vars
+    hint = [False] * n_vars
     for n, (p, c, it) in placement.items():
-        var = enc.var_of.get((n, p, c, it))
+        var = var_lookup((n, p, c, it))
         if var is not None:
             hint[var - 1] = True
     return hint
@@ -174,11 +221,20 @@ def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
     res = MappingResult(success=False, mii=mii, cgra=cgra)
 
+    # the persistent incremental core: one layered formula + live solver
+    # for the whole loop. Routing retries splice nodes into the DFG (a
+    # different formula), so those attempts always take the cold path.
+    sess = None
+    if cfg.incremental:
+        from .sat.portfolio import SolverSession
+        sess = SolverSession(EncoderSession(dfg, cgra, cfg.amo),
+                             method=cfg.solver, seed=cfg.seed)
+
     for ii in range(mii, max_ii + 1):
         if time.time() > deadline:
             res.timed_out = True
             break
-        got = _try_ii(dfg, cgra, ii, cfg, deadline, res.attempts)
+        got = _try_ii(dfg, cgra, ii, cfg, deadline, res.attempts, sess=sess)
         cur_dfg = dfg
         if got is None and cfg.routing:
             # beyond-paper: retry this II with routing nodes spliced in

@@ -29,6 +29,10 @@ def solve(cnf: CNF, method: str = "auto", *, max_conflicts: Optional[int] = None
           walksat_steps: int = 20000, walksat_batch: int = 64,
           stop: Optional[Callable[[], bool]] = None,
           ) -> Tuple[str, Optional[List[bool]]]:
+    if getattr(cnf, "trivially_unsat", False):
+        # an empty clause was recorded (CNF.add_clause marker): fail fast
+        # and identically across every backend
+        return UNSAT, None
     method = resolve_method(method)
     if method == "z3":
         from .z3_backend import solve_z3

@@ -6,6 +6,18 @@ Literals are signed ints (DIMACS). Designed for the KMS instances this
 framework produces (1e4–1e5 vars, 1e5–1e6 clauses) — pure Python, so Z3 is
 preferred when present; this backend is the always-available fallback and
 the reference for the JAX portfolio's UNSAT certification.
+
+Incremental interface (the assumption-based sweep core):
+
+  * ``solve(assumptions=[...])`` — MiniSat-style: assumptions are enqueued
+    as pseudo-decisions below all real decisions; a conflict that reaches
+    decision level 0 is global UNSAT (the solver stays UNSAT forever), a
+    falsified assumption is UNSAT *under these assumptions only*.
+  * ``add_clauses(...)`` — grow the formula between solve calls.
+  * learned clauses, variable activities, and saved phases all persist
+    across calls — solving II=k+1 after II=k starts from everything the
+    previous call derived, which is the whole point of the layered
+    selector-literal encoding in ``repro.core.cnf.IncrementalCNF``.
 """
 from __future__ import annotations
 
@@ -39,26 +51,56 @@ def _luby(x: int) -> int:
 
 
 class CDCLSolver:
-    def __init__(self, cnf: CNF):
-        self.nv = cnf.n_vars
+    def __init__(self, cnf: Optional[CNF] = None):
+        self.nv = 0
         self.clauses: List[List[int]] = []
         self.watches: Dict[int, List[int]] = {}
         # assignment: 0 unassigned, 1 true, -1 false (index = var)
-        self.assign = [0] * (self.nv + 1)
-        self.level = [0] * (self.nv + 1)
-        self.reason: List[Optional[int]] = [None] * (self.nv + 1)
+        self.assign = [0]
+        self.level = [0]
+        self.reason: List[Optional[int]] = [None]
         self.trail: List[int] = []          # assigned literals in order
         self.trail_lim: List[int] = []      # decision-level boundaries
         self.qhead = 0
-        self.activity = [0.0] * (self.nv + 1)
+        self.activity = [0.0]
         self.var_inc = 1.0
-        self.saved_phase = [False] * (self.nv + 1)
+        self.saved_phase = [False]
         self.ok = True
         self._units: List[int] = []
-        for cl in cnf.clauses:
+        self.n_input = 0          # input (non-learnt) clauses incl. units
+        self.n_learnt = 0         # clauses learned (and retained) so far
+        self.conflicts_total = 0  # across all solve() calls
+        self.last_conflicts = 0   # conflicts of the latest solve() call
+        if cnf is not None:
+            self.add_clauses(cnf.clauses, n_vars=cnf.n_vars)
+
+    # ------------------------------------------------------- incremental API
+    def grow_vars(self, n_vars: int) -> None:
+        if n_vars <= self.nv:
+            return
+        extra = n_vars - self.nv
+        self.assign.extend([0] * extra)
+        self.level.extend([0] * extra)
+        self.reason.extend([None] * extra)
+        self.activity.extend([0.0] * extra)
+        self.saved_phase.extend([False] * extra)
+        self.nv = n_vars
+
+    def add_clauses(self, clauses, n_vars: Optional[int] = None) -> bool:
+        """Add input clauses between solve calls (backtracks to level 0;
+        learned clauses and heuristic state are kept). Returns False — and
+        latches the solver UNSAT — on an empty clause."""
+        self._backtrack(0)
+        if n_vars is not None:
+            self.grow_vars(n_vars)
+        else:
+            self.grow_vars(max((abs(l) for cl in clauses for l in cl),
+                               default=0))
+        for cl in clauses:
+            self.n_input += 1
             if not self._add_clause(list(cl)):
                 self.ok = False
-                break
+        return self.ok
 
     # ------------------------------------------------------------ plumbing
     def _value(self, lit: int) -> int:
@@ -211,58 +253,95 @@ class CDCLSolver:
     def solve(self, max_conflicts: Optional[int] = None,
               phase_hint: Optional[List[bool]] = None,
               stop: Optional[Callable[[], bool]] = None,
+              assumptions: Optional[List[int]] = None,
               ) -> Tuple[str, Optional[List[bool]]]:
         """``stop`` is a cooperative cancellation hook (polled every few
         hundred loop iterations); when it returns True the search aborts
         with UNKNOWN. Used by the sweep portfolio to kill higher-II
-        attempts once a lower II wins."""
+        attempts once a lower II wins.
+
+        ``assumptions`` are literals temporarily forced for this call only
+        (MiniSat semantics): they occupy the lowest decision levels, so
+        UNSAT here means "UNSAT under these assumptions" unless the
+        conflict reaches level 0, in which case the formula itself is
+        UNSAT and the solver latches ``ok=False``. The solver object is
+        reusable after any outcome; learned clauses, activities, and
+        phases carry over to the next call.
+        """
         from . import SAT, UNSAT, UNKNOWN
         if not self.ok:
             return UNSAT, None
+        assumptions = assumptions or []
+        self._backtrack(0)
+        self.qhead = 0
         if phase_hint:
             for v in range(1, min(self.nv, len(phase_hint)) + 1):
                 self.saved_phase[v] = bool(phase_hint[v - 1])
         for u in self._units:
             if not self._enqueue(u, None):
+                self.ok = False
                 return UNSAT, None
         if self._propagate() is not None:
+            self.ok = False
             return UNSAT, None
         conflicts = 0
+        self.last_conflicts = 0
         restart_idx = 1
         budget = 100 * _luby(restart_idx)
         ticks = 0
-        while True:
-            ticks += 1
-            if stop is not None and ticks % 256 == 0 and stop():
-                return UNKNOWN, None
-            confl = self._propagate()
-            if confl is not None:
-                conflicts += 1
-                if len(self.trail_lim) == 0:
-                    return UNSAT, None
-                learnt, bt = self._analyze(confl)
-                self._backtrack(bt)
-                if len(learnt) == 1:
-                    if not self._enqueue(learnt[0], None):
-                        return UNSAT, None
-                else:
-                    ci = len(self.clauses)
-                    self.clauses.append(learnt)
-                    self._watch(learnt[0], ci)
-                    self._watch(learnt[1], ci)
-                    self._enqueue(learnt[0], ci)
-                self.var_inc *= 1.0 / 0.95
-                if max_conflicts is not None and conflicts >= max_conflicts:
+        try:
+            while True:
+                ticks += 1
+                if stop is not None and ticks % 256 == 0 and stop():
                     return UNKNOWN, None
-                if conflicts >= budget:
-                    restart_idx += 1
-                    budget = conflicts + 100 * _luby(restart_idx)
-                    self._backtrack(0)
-            else:
-                v = self._decide()
-                if v == 0:
-                    model = [self.assign[u] == 1 for u in range(1, self.nv + 1)]
-                    return SAT, model
-                self.trail_lim.append(len(self.trail))
-                lit = v if self.saved_phase[v] else -v
-                self._enqueue(lit, None)
+                confl = self._propagate()
+                if confl is not None:
+                    conflicts += 1
+                    self.conflicts_total += 1
+                    self.last_conflicts = conflicts
+                    if len(self.trail_lim) == 0:
+                        self.ok = False
+                        return UNSAT, None
+                    learnt, bt = self._analyze(confl)
+                    self._backtrack(bt)
+                    self.n_learnt += 1
+                    if len(learnt) == 1:
+                        if not self._enqueue(learnt[0], None):
+                            self.ok = False
+                            return UNSAT, None
+                    else:
+                        ci = len(self.clauses)
+                        self.clauses.append(learnt)
+                        self._watch(learnt[0], ci)
+                        self._watch(learnt[1], ci)
+                        self._enqueue(learnt[0], ci)
+                    self.var_inc *= 1.0 / 0.95
+                    if max_conflicts is not None and conflicts >= max_conflicts:
+                        return UNKNOWN, None
+                    if conflicts >= budget:
+                        restart_idx += 1
+                        budget = conflicts + 100 * _luby(restart_idx)
+                        self._backtrack(0)
+                elif len(self.trail_lim) < len(assumptions):
+                    # assumption pseudo-decisions occupy the lowest levels;
+                    # a restart undoes them and this branch re-enqueues
+                    lit = assumptions[len(self.trail_lim)]
+                    val = self._value(lit)
+                    if val == -1:
+                        # falsified by propagation from clauses + earlier
+                        # assumptions: UNSAT under these assumptions only
+                        return UNSAT, None
+                    self.trail_lim.append(len(self.trail))
+                    if val == 0:
+                        self._enqueue(lit, None)
+                else:
+                    v = self._decide()
+                    if v == 0:
+                        model = [self.assign[u] == 1
+                                 for u in range(1, self.nv + 1)]
+                        return SAT, model
+                    self.trail_lim.append(len(self.trail))
+                    lit = v if self.saved_phase[v] else -v
+                    self._enqueue(lit, None)
+        finally:
+            self.last_conflicts = conflicts

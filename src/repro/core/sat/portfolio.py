@@ -1,8 +1,16 @@
-"""Mapper-search portfolio: single-instance racing and window solving.
+"""Mapper-search portfolio: single-instance racing, window solving, and the
+persistent incremental ``SolverSession``.
 
 ``solve_portfolio`` is the per-instance portfolio (incomplete sharded
 probSAT first, complete solver for the UNSAT certificate) — deterministic
 for a fixed seed because the two legs run sequentially.
+
+``SolverSession`` is the assumption-based incremental core: it owns one
+layered formula (``repro.core.encode.IncrementalEncoding``) and one
+persistent complete solver for the whole II sweep, so "try II=k" is an
+assumption solve that retains every clause learned at earlier IIs, and the
+WalkSAT leg warm-starts from the previous II's best near-miss assignment
+(the shared variable numbering makes assignments comparable across IIs).
 
 ``solve_window`` is the engine room of the parallel II-sweep
 (``repro.core.sweep``): it takes the CNFs of a window of candidate IIs and
@@ -141,6 +149,165 @@ def solve_portfolio(cnf: CNF, *, seed: int = 0, steps: int = 8192,
 
 
 @dataclass
+class SolveStats:
+    """Reuse statistics of one incremental solve (see IIAttempt)."""
+    learned_retained: Optional[int] = None   # clauses carried into this call
+    conflicts: Optional[int] = None          # conflicts of this call
+    warm_hamming: Optional[int] = None       # warm-start init vs final model
+    via: str = ""
+
+
+class SolverSession:
+    """Persistent incremental solver owned by the Fig. 3 loop.
+
+    One layered formula + one live complete backend cover every candidate
+    II of a sweep: ``solve_complete(ii)`` is ``solve(assumptions=[sel_ii])``
+    on the persistent solver (z3's lemmas / our CDCL's learned clauses,
+    activities, and phases all survive the II bump because delta layers are
+    guarded, never retracted), and ``solve_ii(ii)`` additionally honours
+    the incomplete/portfolio method semantics with WalkSAT warm-started
+    from the best assignment any earlier II produced.
+
+    The cold path (fresh encode+solve per II) remains available via
+    ``MapperConfig(incremental=False)`` as the equivalence reference.
+    """
+
+    def __init__(self, enc_session, method: str = "auto", seed: int = 0,
+                 walksat_steps: Optional[int] = None,
+                 walksat_batch: Optional[int] = None):
+        from . import resolve_method
+        from ..encode import IncrementalEncoding
+        self.enc = IncrementalEncoding(enc_session)
+        self.raw_method = method
+        self.complete_method = resolve_method(
+            "auto" if method in ("walksat", "portfolio") else method)
+        self.seed = seed
+        # defaults track the cold legs' shapes (solve() for walksat,
+        # solve_portfolio() for portfolio) so incremental and cold runs of
+        # the same kernel share the probSAT XLA compile cache
+        if method == "portfolio":
+            self.walksat_steps = walksat_steps or 8192
+            self.walksat_batch = walksat_batch or 32 * jax.device_count()
+        else:
+            self.walksat_steps = walksat_steps or 20000
+            self.walksat_batch = walksat_batch or 64
+        self._cdcl = None
+        self._z3 = None
+        self._synced = 0                      # clauses pushed to the backend
+        self.best_assign: Optional[List[bool]] = None   # layout-var space
+        self.best_quality: Optional[int] = None         # unsat count (0=model)
+        self._best_lock = threading.Lock()    # racer threads update warm state
+        self.n_solves = 0
+
+    # ------------------------------------------------------------- formula
+    def ensure_ii(self, ii: int) -> None:
+        self.enc.ensure_ii(ii)
+
+    def project(self, ii: int) -> CNF:
+        return self.enc.project(ii)
+
+    def stats_for(self, ii: int):
+        return self.enc.stats_for(ii)
+
+    def _backend(self):
+        if self.complete_method == "z3":
+            if self._z3 is None:
+                from .z3_backend import Z3IncrementalSolver
+                self._z3 = Z3IncrementalSolver()
+            return self._z3
+        if self._cdcl is None:
+            from .cdcl import CDCLSolver
+            self._cdcl = CDCLSolver()
+        return self._cdcl
+
+    def _sync(self):
+        """Push clauses encoded since the last solve into the live solver
+        (append-only: layers are guarded, nothing is ever retracted)."""
+        backend = self._backend()
+        inc = self.enc.inc
+        if self._synced < len(inc.clauses):
+            backend.add_clauses(inc.clauses[self._synced:], n_vars=inc.n_vars)
+            self._synced = len(inc.clauses)
+        return backend
+
+    # -------------------------------------------------------------- solving
+    def solve_complete(self, ii: int, stop: Optional[Callable[[], bool]] = None,
+                       phase_hint: Optional[List[bool]] = None,
+                       ) -> Tuple[str, Optional[List[bool]], SolveStats]:
+        """Assumption-based solve of base + II's delta on the persistent
+        complete backend."""
+        self.ensure_ii(ii)
+        assumptions = self.enc.assumptions(ii)
+        backend = self._sync()
+        stats = SolveStats(via=self.complete_method)
+        if self.complete_method == "cdcl":
+            stats.learned_retained = backend.n_learnt
+            status, model = backend.solve(assumptions=assumptions, stop=stop,
+                                          phase_hint=phase_hint)
+            stats.conflicts = backend.last_conflicts
+        else:
+            status, model = backend.solve(assumptions=assumptions, stop=stop)
+            zst = backend.stats()
+            stats.conflicts = int(zst.get("conflicts", 0)) or None
+        self.n_solves += 1
+        from . import SAT
+        if status == SAT and model:
+            self.update_best(model, 0)
+        return status, model, stats
+
+    def solve_ii(self, ii: int, stop: Optional[Callable[[], bool]] = None,
+                 phase_hint: Optional[List[bool]] = None,
+                 ) -> Tuple[str, Optional[List[bool]], SolveStats]:
+        """Per-II solve honouring the session's method semantics:
+        ``walksat`` = warm-started incomplete only; ``portfolio`` =
+        warm-started WalkSAT first, persistent complete solver as the
+        fallback/certificate; anything else = ``solve_complete``."""
+        from . import SAT
+        if self.raw_method not in ("walksat", "portfolio"):
+            return self.solve_complete(ii, stop=stop, phase_hint=phase_hint)
+        from .walksat_jax import solve_walksat
+        init = self.warm_init()
+        near: dict = {}
+        cnf = self.project(ii)
+        status, model = solve_walksat(
+            cnf, seed=self.seed, steps=self.walksat_steps,
+            batch=self.walksat_batch, stop=stop, init=init, near_miss=near)
+        if status == SAT:
+            stats = SolveStats(via="walksat")
+            if init is not None:
+                stats.warm_hamming = _hamming(init, model)
+            self.update_best(model, 0)
+            self.n_solves += 1
+            return status, model, stats
+        if 0 in near:
+            self.update_best(near[0][1], near[0][0])
+        if self.raw_method == "walksat":
+            self.n_solves += 1
+            return status, None, SolveStats(via="walksat")
+        return self.solve_complete(ii, stop=stop, phase_hint=phase_hint)
+
+    # ------------------------------------------------------------ warm state
+    def warm_init(self) -> Optional[List[bool]]:
+        return self.best_assign
+
+    def update_best(self, assign: List[bool], n_unsat: int) -> None:
+        """Keep the highest-quality recent assignment as the next warm
+        start: a full model (n_unsat=0) always wins; a near-miss replaces
+        only a worse (or absent) near-miss. Locked: the window racer
+        thread and the complete leg both report here."""
+        nv = self.enc.inc.n_base_vars or self.enc.inc.n_vars
+        with self._best_lock:
+            if n_unsat == 0 or self.best_quality is None \
+                    or self.best_quality > n_unsat:
+                self.best_assign = list(assign[:nv])
+                self.best_quality = n_unsat
+
+
+def _hamming(a: List[bool], b: List[bool]) -> int:
+    return sum(1 for x, y in zip(a, b) if bool(x) != bool(y))
+
+
+@dataclass
 class WindowResult:
     """Outcome of one candidate in a window solve."""
     status: str                      # SAT | UNSAT | UNKNOWN | CANCELLED
@@ -150,6 +317,7 @@ class WindowResult:
     # queueing + solving, NOT the solver's own runtime (candidates share
     # a worker pool; a 0.1s solve that waited 5s reports 5.1s)
     solve_time: float
+    stats: Optional[SolveStats] = None
 
 
 def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
@@ -158,6 +326,8 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                  max_workers: Optional[int] = None,
                  deadline: Optional[float] = None,
                  accept: Optional[Callable[[int, List[bool]], bool]] = None,
+                 session: Optional[SolverSession] = None,
+                 iis: Optional[List[int]] = None,
                  ) -> List[WindowResult]:
     """Solve a window of K CNFs (candidate IIs, ascending) concurrently.
 
@@ -173,6 +343,14 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
     resolved the window — easy windows (the common case on small kernels)
     never pay for it, hard SAT instances still get cracked while CDCL/z3
     grinds on the proofs.
+
+    With ``session`` (the incremental core), the complete leg is the
+    session's one persistent assumption-based solver, lowest II first —
+    learned clauses from candidate i carry straight into candidate i+1, so
+    consecutive UNSAT proofs start warm instead of re-deriving the same
+    conflicts in parallel cold solvers. ``cnfs`` must then be the session's
+    per-II projections (``session.project(ii)``, ascending II order): the
+    racer walks those, warm-started from the session's best assignment.
     """
     from . import SAT, UNKNOWN, resolve_method, solve as solve_any
 
@@ -192,7 +370,8 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
     def past_deadline() -> bool:
         return deadline is not None and time.time() > deadline
 
-    def deliver(i: int, status: str, model, via: str) -> None:
+    def deliver(i: int, status: str, model, via: str,
+                stats: Optional[SolveStats] = None) -> None:
         with lock:
             if closed.is_set() or results[i] is not None:
                 return
@@ -207,7 +386,13 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                     # sequential reference would have judged. Leave the
                     # candidate open for the complete leg.
                     return
-            results[i] = WindowResult(status, model, via, time.time() - t0)
+            results[i] = WindowResult(status, model, via, time.time() - t0,
+                                      stats)
+            if session is not None and status == SAT and model:
+                # recorded while the window is provably open (we hold the
+                # lock and ``closed`` is unset), so a late racer thread
+                # can never clobber a *later* window's warm-start state
+                session.update_best(model, 0)
             stops[i].set()
             if accepted:
                 for j in range(i + 1, K):
@@ -232,15 +417,38 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
         if past_deadline():
             return
         from .walksat_jax import solve_walksat_window
+        inits = None
+        near: dict = {}
+        if session is not None:
+            warm = session.warm_init()
+            if warm is not None:
+                inits = [warm] * K
+
+        def on_sat_cb(i: int, model) -> None:
+            st = None
+            if inits is not None:
+                st = SolveStats(via="walksat",
+                                warm_hamming=_hamming(inits[i], model))
+            deliver(i, SAT, model, "walksat", st)   # also records warm state
+
         try:
             solve_walksat_window(
                 cnfs, seed=seed, steps=walksat_steps, batch=walksat_batch,
                 stop=lambda: past_deadline() or all(
                     s.is_set() for s in stops),
                 should_skip=lambda i: stops[i].is_set(),
-                on_sat=lambda i, model: deliver(i, SAT, model, "walksat"))
+                on_sat=on_sat_cb, inits=inits,
+                near_miss=near if session is not None else None)
         except Exception:   # incomplete leg must never take down the window
             pass
+        if session is not None:
+            # this racer thread is deliberately unjoined and may drain
+            # after solve_window has returned — near-misses from a closed
+            # window must not clobber a later window's warm-start state
+            with lock:
+                if not closed.is_set():
+                    for nu, a in near.values():
+                        session.update_best(a, nu)
 
     def _start_racer() -> None:
         # Racer thread, deliberately not joined later: JAX compiled
@@ -326,7 +534,29 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
             _PROC_POOL_BROKEN, _PROC_POOL = True, None
             return None
 
-    if complete:
+    def run_session_leg() -> None:
+        """The incremental complete leg: one persistent assumption-based
+        solver, lowest II first. Sequential by design — candidate i's
+        learned clauses are exactly what makes candidate i+1 cheap, which
+        replaces the cold path's process-parallel independent proofs."""
+        assert iis is not None and len(iis) == K, \
+            "session window solving needs the candidate IIs"
+        for i in range(K):
+            if past_deadline():
+                break
+            if stops[i].is_set():
+                continue
+            status, model, st = session.solve_complete(
+                iis[i],
+                stop=lambda: stops[i].is_set() or past_deadline())
+            if status == UNKNOWN and (stops[i].is_set() or past_deadline()):
+                continue   # cancelled / timed out; filled in at the end
+            deliver(i, status, model, method, st)
+
+    if complete and session is not None:
+        _start_racer()
+        run_session_leg()
+    elif complete:
         futs = submit_procs() if method == "cdcl" else None
         _start_racer()
         if futs is not None:
@@ -341,10 +571,17 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
     else:
         # incomplete-only window (method == "walksat")
         from .walksat_jax import solve_walksat_window
+        warm = session.warm_init() if session is not None else None
+        near: dict = {}
         ws = solve_walksat_window(
             cnfs, seed=seed, steps=walksat_steps, batch=walksat_batch,
             stop=past_deadline, should_skip=lambda i: stops[i].is_set(),
-            on_sat=lambda i, model: deliver(i, SAT, model, "walksat"))
+            on_sat=lambda i, model: deliver(i, SAT, model, "walksat"),
+            inits=[warm] * K if warm is not None else None,
+            near_miss=near if session is not None else None)
+        if session is not None:
+            for nu, a in near.values():
+                session.update_best(a, nu)
         for i, (status, model) in enumerate(ws):
             if status != SAT:      # SAT already delivered via on_sat
                 deliver(i, status, model, "walksat")

@@ -82,8 +82,11 @@ def true_counts_batch(packed: PackedCNF, assign: jnp.ndarray,
 
 
 def _chains_core(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
-                 steps: int, cb: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """probSAT chains. assign0: [B, V+1] bool. Returns (solved [B], assign)."""
+                 steps: int, cb: float,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """probSAT chains. assign0: [B, V+1] bool. Returns (solved [B], assign,
+    final per-clause true counts [B, C] — zero entries mark the unsat
+    clauses, the near-miss signal for warm starts)."""
 
     def clause_sat(assign):                       # [V+1] -> [C] int32
         return true_counts_ref(packed, assign)
@@ -130,7 +133,7 @@ def _chains_core(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
     (assign, tc, _), _ = jax.lax.scan(step, (assign0, tc0, key), None,
                                       length=steps)
     solved = ~jnp.any(tc == 0, axis=-1)
-    return solved, assign
+    return solved, assign, tc
 
 
 _run_chains = jax.jit(_chains_core, static_argnums=(3, 4))
@@ -141,11 +144,12 @@ def _run_chains_window(cvars: jnp.ndarray, csign: jnp.ndarray,
                        ovars: jnp.ndarray, osign: jnp.ndarray,
                        n_vars: int, steps: int, cb: float,
                        assign0: jnp.ndarray, keys: jnp.ndarray,
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """vmapped probSAT over a *window* of K CNFs (one per candidate II).
 
     cvars/csign: [K, C, Lmax]; ovars/osign: [K, V+1, Omax];
-    assign0: [K, B, V+1]; keys: [K, 2]. Returns (solved [K, B], assign).
+    assign0: [K, B, V+1]; keys: [K, 2]. Returns (solved [K, B], assign,
+    per-clause true counts [K, B, C] — the near-miss signal).
     """
     def one(cv, cs, ov, os_, a0, k):
         packed = PackedCNF(cv, cs, ov, os_, n_vars, cv.shape[0])
@@ -155,6 +159,34 @@ def _run_chains_window(cvars: jnp.ndarray, csign: jnp.ndarray,
 
 def _bucket(x: int, q: int) -> int:
     return ((x + q - 1) // q) * q
+
+
+def _next_chunk(prev: int, cap: int, remaining: int) -> int:
+    """Progressive chunk schedule: double from 256 up to ``cap``, then
+    shrink back down (powers of two only, so the handful of jit entries is
+    shared) to land on the step budget without overshooting by more than
+    one minimal chunk."""
+    c = min(prev * 2, cap)
+    while c > 256 and c > remaining:
+        c //= 2
+    return c
+
+
+def _init_assign(key: jnp.ndarray, batch: int, n_vars_padded: int,
+                 init: Optional[List[bool]]) -> jnp.ndarray:
+    """Initial chain assignments [B, V+1]. Without ``init``: uniform
+    random. With ``init`` (a warm start, e.g. the previous II's best
+    near-miss under the shared variable numbering): chain 0 starts from it
+    exactly and chain b flips a growing fraction (up to half) of the
+    variables, so the batch explores a widening neighbourhood of the hint
+    while keeping full random restarts in the tail."""
+    if init is None:
+        return jax.random.bernoulli(key, 0.5, (batch, n_vars_padded + 1))
+    base = np.zeros(n_vars_padded + 1, bool)
+    base[1:len(init) + 1] = np.asarray(init, bool)[:n_vars_padded]
+    ps = jnp.linspace(0.0, 0.5, batch)[:, None]
+    flips = jax.random.bernoulli(key, ps, (batch, n_vars_padded + 1))
+    return jnp.asarray(base)[None, :] ^ flips
 
 
 def pack_cnf_window(cnfs: List[CNF]) -> PackedCNF:
@@ -202,6 +234,8 @@ def pack_cnf_window(cnfs: List[CNF]) -> PackedCNF:
 def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
                          steps: int = 8192, batch: int = 24, cb: float = 2.3,
                          stop=None, should_skip=None, on_sat=None,
+                         inits: Optional[List[Optional[List[bool]]]] = None,
+                         near_miss: Optional[dict] = None,
                          ) -> List[Tuple[str, Optional[List[bool]]]]:
     """Batched probSAT across a window of candidate-II CNFs.
 
@@ -214,13 +248,20 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
     ``on_sat(i, model)`` fires as soon as candidate i is certified, so the
     caller can early-cancel other work while remaining candidates keep
     walking.
+
+    ``inits[i]`` warm-starts candidate i's chains from a prior assignment
+    (see ``_init_assign``); ``near_miss``, when given a dict, receives
+    ``{i: (n_unsat, assignment)}`` — the best assignment each unsolved
+    candidate reached, which the incremental ``SolverSession`` feeds to the
+    next window as the warm start.
     """
     from . import SAT, UNKNOWN, UNSAT
     K = len(cnfs)
     results: List[Tuple[str, Optional[List[bool]]]] = [(UNKNOWN, None)] * K
     live = []
     for i, cnf in enumerate(cnfs):
-        if any(len(c) == 0 for c in cnf.clauses):
+        if getattr(cnf, "trivially_unsat", False) or \
+                any(len(c) == 0 for c in cnf.clauses):
             results[i] = (UNSAT, None)
         elif cnf.n_clauses == 0 or cnf.n_vars == 0:
             results[i] = (SAT, [False] * cnf.n_vars)
@@ -233,19 +274,27 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
     packed = pack_cnf_window([cnfs[i] for i in live])
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
-    assign0 = jax.random.bernoulli(
-        k0, 0.5, (len(live), batch, packed.n_vars + 1))
+    init_keys = jax.random.split(k0, len(live))
+    assign0 = jnp.stack([
+        _init_assign(init_keys[j], batch, packed.n_vars,
+                     inits[live[j]] if inits is not None else None)
+        for j in range(len(live))])
     # bound wall-time per chunk (stop/skip are only polled between chunks,
-    # and a cancelled racer must drain fast): fewer steps for big formulas
-    chunk = max(64, min(steps, 2048, 2_000_000 // max(packed.n_clauses, 1)))
+    # and a cancelled racer must drain fast): fewer steps for big formulas.
+    # Chunks start small and double so easy SAT instances exit after a few
+    # hundred steps instead of paying the full cap; chunk sizes are powers
+    # of two, so the handful of jit entries is shared across windows.
+    cap = max(64, min(steps, 2048, 2_000_000 // max(packed.n_clauses, 1)))
+    chunk = min(256, cap)
     done = 0
     pending = set(range(len(live)))
+    tc = None
     while done < steps and pending:
         if stop is not None and stop():
             break
         key, kc = jax.random.split(key)
         keys = jax.random.split(kc, len(live))
-        solved, assign = _run_chains_window(
+        solved, assign, tc = _run_chains_window(
             packed.cvars, packed.csign, packed.ovars, packed.osign,
             packed.n_vars, chunk, cb, assign0, keys)
         solved_np = np.asarray(solved)
@@ -266,35 +315,64 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
                 on_sat(i, model)
         assign0 = assign
         done += chunk
+        chunk = _next_chunk(chunk, cap, steps - done)
+    if near_miss is not None and tc is not None:
+        n_unsat = np.asarray(jnp.sum(tc == 0, axis=-1))      # [K_live, B]
+        assign_np = np.asarray(assign0)
+        for j in range(len(live)):
+            i = live[j]
+            row = int(np.argmin(n_unsat[j]))
+            near_miss[i] = (int(n_unsat[j, row]),
+                            [bool(b) for b in
+                             assign_np[j, row][1:cnfs[i].n_vars + 1]])
     return results
 
 
 def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
                   batch: int = 64, cb: float = 2.3, stop=None,
+                  init: Optional[List[bool]] = None,
+                  near_miss: Optional[dict] = None,
                   ) -> Tuple[str, Optional[List[bool]]]:
     from . import SAT, UNKNOWN, UNSAT
-    if any(len(c) == 0 for c in cnf.clauses):
+    if getattr(cnf, "trivially_unsat", False) or \
+            any(len(c) == 0 for c in cnf.clauses):
         return UNSAT, None
     if cnf.n_clauses == 0 or cnf.n_vars == 0:
         return SAT, [False] * cnf.n_vars
-    packed = pack_cnf(cnf)
+    # bucketed padded pack (the K=1 window): consecutive IIs of a sweep —
+    # and the incremental projections, whose handful of selector variables
+    # would otherwise change the tensor shapes — reuse one XLA compile
+    w = pack_cnf_window([cnf])
+    packed = PackedCNF(w.cvars[0], w.csign[0], w.ovars[0], w.osign[0],
+                       w.n_vars, w.n_clauses)
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
-    assign0 = jax.random.bernoulli(k0, 0.5, (batch, cnf.n_vars + 1))
-    # chunk the walk so we can stop early once a chain solves
-    chunk = max(256, min(steps, 2048))
+    assign0 = _init_assign(k0, batch, packed.n_vars, init)
+    # chunk the walk so we can stop early once a chain solves; chunks
+    # start small and double (powers of two share jit cache entries), so
+    # easy instances return after a few hundred steps
+    cap = max(256, min(steps, 2048))
+    chunk = min(256, cap)
     done = 0
+    tc = None
     while done < steps:
         if stop is not None and stop():
             return UNKNOWN, None
         key, kc = jax.random.split(key)
-        solved, assign = _run_chains(packed, assign0, kc, chunk, cb)
+        solved, assign, tc = _run_chains(packed, assign0, kc, chunk, cb)
         solved = np.asarray(solved)
         if solved.any():
             row = int(np.argmax(solved))
-            model = np.asarray(assign[row])[1:].tolist()
+            model = np.asarray(assign[row])[1:cnf.n_vars + 1].tolist()
             assert cnf.check(model), "walksat returned a non-model"
             return SAT, [bool(b) for b in model]
         assign0 = assign
         done += chunk
+        chunk = _next_chunk(chunk, cap, steps - done)
+    if near_miss is not None and tc is not None:
+        n_unsat = np.asarray(jnp.sum(tc == 0, axis=-1))
+        row = int(np.argmin(n_unsat))
+        near_miss[0] = (int(n_unsat[row]),
+                        [bool(b) for b in
+                         np.asarray(assign0[row])[1:cnf.n_vars + 1]])
     return UNKNOWN, None

@@ -1,9 +1,84 @@
-"""Z3 backend — the solver used in the paper's own experiments."""
+"""Z3 backend — the solver used in the paper's own experiments.
+
+``solve_z3`` is the one-shot (cold) path. ``Z3IncrementalSolver`` keeps a
+single ``z3.Solver`` alive across the II sweep: clauses are only ever
+added (delta layers arrive guarded by selector literals, see
+``repro.core.cnf.IncrementalCNF``) and each candidate II is decided by
+``check(assumptions)`` — no push/pop, so z3 retains its learned lemmas
+across consecutive IIs instead of re-deriving them per call.
+"""
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..cnf import CNF
+
+
+class Z3IncrementalSolver:
+    """One persistent ``z3.Solver`` with assumption-based solving."""
+
+    def __init__(self):
+        import z3
+        self._z3 = z3
+        self.solver = z3.Solver()
+        self.xs: List = [None]      # xs[v] = Bool for var v (1-based)
+        self.n_clauses = 0
+        self.unsat_latched = False  # an unguarded empty clause arrived
+
+    def grow_vars(self, n_vars: int) -> None:
+        z3 = self._z3
+        while len(self.xs) <= n_vars:
+            self.xs.append(z3.Bool(f"x{len(self.xs)}"))
+
+    def add_clauses(self, clauses: Sequence[Tuple[int, ...]],
+                    n_vars: Optional[int] = None) -> None:
+        z3, xs = self._z3, self.xs
+        if n_vars is not None:
+            self.grow_vars(n_vars)
+        else:
+            self.grow_vars(max((abs(l) for cl in clauses for l in cl),
+                               default=0))
+            xs = self.xs
+        for cl in clauses:
+            if not cl:
+                self.unsat_latched = True
+                continue
+            self.solver.add(
+                z3.Or(*[xs[l] if l > 0 else z3.Not(xs[-l]) for l in cl]))
+            self.n_clauses += 1
+
+    def solve(self, assumptions: Optional[List[int]] = None,
+              stop: Optional[Callable[[], bool]] = None,
+              ) -> Tuple[str, Optional[List[bool]]]:
+        z3 = self._z3
+        from . import SAT, UNSAT, UNKNOWN
+        if self.unsat_latched:
+            return UNSAT, None
+        if stop is not None and stop():
+            return UNKNOWN, None
+        xs = self.xs
+        assumed = [xs[l] if l > 0 else z3.Not(xs[-l])
+                   for l in (assumptions or [])]
+        # cooperative cancellation: bounded solve slices, polling ``stop``
+        # between slices (z3 releases the GIL inside check())
+        self.solver.set("timeout", 500 if stop is not None else 0)
+        while True:
+            res = self.solver.check(*assumed)
+            if res == z3.sat:
+                m = self.solver.model()
+                return SAT, [z3.is_true(m[xs[v]])
+                             for v in range(1, len(xs))]
+            if res == z3.unsat:
+                return UNSAT, None
+            if stop is None or stop():
+                return UNKNOWN, None
+
+    def stats(self) -> Dict[str, float]:
+        """Best-effort solver statistics (key set depends on z3 build)."""
+        try:
+            return {k: v for k, v in self.solver.statistics()}
+        except Exception:
+            return {}
 
 
 def solve_z3(cnf: CNF, timeout_ms: Optional[int] = None,
@@ -12,6 +87,8 @@ def solve_z3(cnf: CNF, timeout_ms: Optional[int] = None,
     import z3
     from . import SAT, UNSAT, UNKNOWN
 
+    if getattr(cnf, "trivially_unsat", False):
+        return UNSAT, None
     if stop is not None and stop():
         return UNKNOWN, None
     s = z3.Solver()

@@ -11,9 +11,13 @@ attempts are *independent* SAT instances, so this engine:
      and only the II-dependent C2 fold and C3 timing windows are re-derived
      per candidate;
   2. solves the whole window concurrently via
-     :func:`repro.core.sat.portfolio.solve_window` — complete solvers in a
-     thread pool racing a batched WalkSAT that vmaps restarts across the II
-     candidates;
+     :func:`repro.core.sat.portfolio.solve_window` — with the default
+     incremental core, one persistent assumption-based complete solver
+     walks the candidates lowest-II-first (every UNSAT proof's learned
+     clauses carry into the next candidate) while racing a batched WalkSAT
+     that vmaps restarts across the II candidates, warm-started from the
+     best assignment earlier IIs produced; with ``incremental=False``,
+     cold complete solvers run per candidate in a process/thread pool;
   3. early-cancels all higher-II attempts the moment a lower II returns
      SAT *and* passes register allocation, and slides the window upward
      only when every candidate in it fails.
@@ -48,7 +52,7 @@ from .encode import EncoderSession, Encoding
 from .mapper import IIAttempt, MapperConfig, MappingResult
 from .regalloc import RegAllocResult, allocate
 from .sat import SAT, UNKNOWN, UNSAT
-from .sat.portfolio import CANCELLED, WindowResult, solve_window
+from .sat.portfolio import solve_window
 from .schedule import min_ii
 from .simulator import verify_mapping
 
@@ -79,6 +83,13 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
     res = MappingResult(success=False, mii=mii, cgra=cgra)
     session = EncoderSession(dfg, cgra, cfg.amo)
+    # the incremental core: one persistent layered formula + live complete
+    # solver across every window of the sweep (see portfolio.SolverSession);
+    # cfg.incremental=False keeps the cold per-II encode+solve reference.
+    sess = None
+    if cfg.incremental:
+        from .sat.portfolio import SolverSession
+        sess = SolverSession(session, method=cfg.solver, seed=cfg.seed)
 
     base = mii
     while base <= max_ii:
@@ -88,10 +99,28 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
         iis = list(range(base, min(base + sweep_width - 1, max_ii) + 1))
         encs: List[Encoding] = []
         enc_times: List[float] = []
+        cnfs = []
+        stats_list: List[Dict[str, int]] = []
         for ii in iis:
             t0 = time.time()
-            encs.append(session.encode(ii))
+            if sess is not None:
+                sess.ensure_ii(ii)
+                stats_list.append(sess.stats_for(ii))
+            else:
+                encs.append(session.encode(ii))
+                stats_list.append(encs[-1].stats)
             enc_times.append(time.time() - t0)
+        if sess is not None:
+            # projections materialised only after the whole window is
+            # encoded, so their variable space is window-consistent
+            cnfs = [sess.project(ii) for ii in iis]
+        else:
+            cnfs = [e.cnf for e in encs]
+
+        def decode(i: int, model: List[bool]):
+            if sess is not None:
+                return sess.enc.decode(iis[i], model)
+            return encs[i].decode(model)
 
         # regalloc results captured by the accept callback, keyed by window
         # index; accept returns True (=> cancel all higher IIs) only when
@@ -100,23 +129,28 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
                                     RegAllocResult]] = {}
 
         def accept(i: int, model: List[bool]) -> bool:
-            placement = encs[i].decode(model)
+            placement = decode(i, model)
             ra = allocate(dfg, cgra, placement, iis[i])
             placements[i] = (placement, ra)
             return ra.ok
 
         wres = solve_window(
-            [e.cnf for e in encs], method=cfg.solver, seed=cfg.seed,
-            deadline=deadline, accept=accept)
+            cnfs, method=cfg.solver, seed=cfg.seed,
+            deadline=deadline, accept=accept, session=sess, iis=iis)
 
         winner: Optional[int] = None
         blocked = False   # an unresolved candidate below the best SAT
         for i, ii in enumerate(iis):
             r = wres[i]
             att = IIAttempt(
-                ii=ii, n_vars=encs[i].stats["vars"],
-                n_clauses=encs[i].stats["clauses"], status=r.status,
-                solve_time=r.solve_time, encode_time=enc_times[i])
+                ii=ii, n_vars=stats_list[i]["vars"],
+                n_clauses=stats_list[i]["clauses"], status=r.status,
+                solve_time=r.solve_time, encode_time=enc_times[i],
+                via=r.via if r.status in (SAT, UNSAT) else "")
+            if r.stats is not None:
+                att.learned_retained = r.stats.learned_retained
+                att.conflicts = r.stats.conflicts
+                att.warm_hamming = r.stats.warm_hamming
             if i in placements:
                 att.regalloc_ok = placements[i][1].ok
             res.attempts.append(att)

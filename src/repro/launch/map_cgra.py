@@ -51,35 +51,75 @@ def loops_for(cfg):
     return loops
 
 
+def _amo_clause_counts(g, cgra, mii: int) -> str:
+    """Clause counts of the pairwise vs Sinz-sequential AMO at MII."""
+    from ..core.encode import encode
+    counts = {amo: encode(g, cgra, max(mii, 1), amo).stats["clauses"]
+              for amo in ("pairwise", "sequential")}
+    return (f"clauses@MII pairwise={counts['pairwise']} "
+            f"sequential={counts['sequential']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--cgra", default="4x4")
     ap.add_argument("--routing", action="store_true")
+    ap.add_argument("--amo", choices=["pairwise", "sequential"],
+                    default="pairwise",
+                    help="at-most-one encoding: the paper's pairwise or the "
+                         "Sinz sequential (O(k) ternary clauses)")
+    ap.add_argument("--cold", action="store_true",
+                    help="disable the incremental assumption-based solver "
+                         "core (fresh encode+solve per II, the paper-"
+                         "faithful reference)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print per-II attempt lines with solver reuse "
+                         "stats (learned clauses retained, conflicts, "
+                         "warm-start hamming distance)")
     ap.add_argument("--sweep", type=int, default=0, metavar="K",
                     help="also run the parallel II-sweep engine with window "
                          "width K and report both modes side-by-side")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     cgra = cgra_from_name(args.cgra)
-    print(f"CGRA offload report: {cfg.name} on {cgra}")
+    mode = "cold" if args.cold else "incremental"
+    print(f"CGRA offload report: {cfg.name} on {cgra} "
+          f"[amo={args.amo}, {mode}]")
     for name, fn, n_carry, loads in loops_for(cfg):
         g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
         r = map_loop(g, cgra, MapperConfig(
-            solver="auto", timeout_s=60, routing=args.routing))
+            solver="auto", timeout_s=60, routing=args.routing, amo=args.amo,
+            incremental=not args.cold))
         status = f"II={r.ii} (MII={r.mii})" if r.success else "NO MAPPING"
         line = (f"  {name:16s} nodes={g.n:2d}  {status}  "
                 f"[seq {r.total_time:.2f}s, {len(r.attempts)} attempts]")
         if args.sweep > 1:
             g2, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
                                     name=name)
-            rs = map_loop(g2, cgra, MapperConfig(solver="auto", timeout_s=60),
-                          sweep_width=args.sweep)
+            rs = map_loop(g2, cgra, MapperConfig(
+                solver="auto", timeout_s=60, amo=args.amo,
+                incremental=not args.cold), sweep_width=args.sweep)
             sstat = f"II={rs.ii}" if rs.success else "NO MAPPING"
             line += f"  | sweep(k={args.sweep}) {sstat} [{rs.total_time:.2f}s]"
             if rs.success and r.success and rs.ii != r.ii:
                 line += "  !! sweep/sequential II mismatch"
         print(line)
+        if args.verbose:
+            print(f"      {_amo_clause_counts(g, cgra, r.mii)}")
+            for a in r.attempts:
+                reuse = ""
+                if a.learned_retained is not None:
+                    reuse += f" retained={a.learned_retained}"
+                if a.conflicts is not None:
+                    reuse += f" conflicts={a.conflicts}"
+                if a.warm_hamming is not None:
+                    reuse += f" warm_hamming={a.warm_hamming}"
+                via = f" via={a.via}" if a.via else ""
+                print(f"      II={a.ii} {a.status}{via} "
+                      f"vars={a.n_vars} clauses={a.n_clauses} "
+                      f"enc={a.encode_time*1e3:.1f}ms "
+                      f"solve={a.solve_time*1e3:.1f}ms{reuse}")
 
 
 if __name__ == "__main__":

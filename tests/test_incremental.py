@@ -1,0 +1,316 @@
+"""Incremental assumption-based SAT core: layered IncrementalCNF semantics,
+CDCL assumption handling + learned-clause retention, incremental-vs-cold
+equivalence for every backend, and the AMO encoding property tests."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import given, settings, strategies as st
+
+from repro.core import suite
+from repro.core.cgra import CGRA
+from repro.core.cnf import CNF, IncrementalCNF
+from repro.core.dfg import DFG, running_example
+from repro.core.encode import EncoderSession, IncrementalEncoding, encode
+from repro.core.mapper import MapperConfig, map_loop
+from repro.core.sat import SAT, UNKNOWN, UNSAT, solve
+from repro.core.sat.cdcl import CDCLSolver
+from repro.core.sat.portfolio import SolverSession, solve_window
+from repro.core.simulator import verify_mapping
+
+
+# ------------------------------------------------------------ CNF marker
+def test_add_clause_empty_records_trivially_unsat_marker():
+    cnf = CNF()
+    cnf.n_vars = 2
+    cnf.add_clause([1, 2])
+    assert not cnf.trivially_unsat
+    cnf.add_clause([])
+    assert cnf.trivially_unsat
+    assert not cnf.check([True, True])
+
+
+@pytest.mark.parametrize("method", ["cdcl", "walksat", "auto"])
+def test_backends_fail_fast_on_trivially_unsat(method):
+    cnf = CNF()
+    cnf.n_vars = 3
+    cnf.add_clause([1, 2])
+    cnf.add_clause([])
+    assert solve(cnf, method)[0] == UNSAT
+
+
+def test_add_still_asserts_on_empty():
+    with pytest.raises(AssertionError):
+        CNF().add()
+
+
+# ------------------------------------------------------ IncrementalCNF
+def _inc_two_layers():
+    """Base: (x1). Layer 'a': (x2). Layer 'b': (¬x2)."""
+    inc = IncrementalCNF()
+    x1, x2 = inc.new_vars(2)
+    inc.add(x1)
+    inc.begin_layer("a")
+    inc.add(x2)
+    inc.end_layer()
+    inc.begin_layer("b")
+    inc.add(-x2)
+    inc.end_layer()
+    return inc, x1, x2
+
+
+def test_layer_clauses_carry_selector_guard():
+    inc, x1, x2 = _inc_two_layers()
+    sa, sb = inc.selector("a"), inc.selector("b")
+    assert (x1,) in inc.clauses                 # base unguarded
+    assert (x2, -sa) in inc.clauses             # guarded by ¬selector
+    assert (-x2, -sb) in inc.clauses
+    assert set(inc.assumptions_for("a")) == {sa, -sb}
+
+
+def test_projection_strips_guards():
+    inc, x1, x2 = _inc_two_layers()
+    pa = inc.project("a")
+    assert (x1,) in pa.clauses and (x2,) in pa.clauses
+    assert all(len(c) <= 2 for c in pa.clauses)
+    pb = inc.project("b")
+    assert (-x2,) in pb.clauses and (x2,) not in pb.clauses
+
+
+def test_assumption_solve_activates_exactly_one_layer():
+    inc, x1, x2 = _inc_two_layers()
+    solver = CDCLSolver(inc)
+    sta, ma = solver.solve(assumptions=inc.assumptions_for("a"))
+    assert sta == SAT and ma[x1 - 1] and ma[x2 - 1]
+    stb, mb = solver.solve(assumptions=inc.assumptions_for("b"))
+    assert stb == SAT and mb[x1 - 1] and not mb[x2 - 1]
+
+
+def test_empty_clause_inside_layer_is_layer_local():
+    inc = IncrementalCNF()
+    x1 = inc.new_var()
+    inc.add(x1)
+    inc.begin_layer("dead")
+    inc.add_clause([])          # forbids activating this layer only
+    inc.end_layer()
+    inc.begin_layer("live")
+    inc.add(-x1, x1)
+    inc.end_layer()
+    assert not inc.trivially_unsat
+    assert inc.project("dead").trivially_unsat
+    solver = CDCLSolver(inc)
+    assert solver.solve(assumptions=inc.assumptions_for("dead"))[0] == UNSAT
+    assert solver.solve(assumptions=inc.assumptions_for("live"))[0] == SAT
+
+
+# ----------------------------------------------------- CDCL assumptions
+def test_cdcl_assumptions_basic_semantics():
+    cnf = CNF()
+    cnf.n_vars = 2
+    cnf.add(1, 2)
+    s = CDCLSolver(cnf)
+    st_, m = s.solve(assumptions=[-1])
+    assert st_ == SAT and not m[0] and m[1]
+    assert s.solve(assumptions=[-1, -2])[0] == UNSAT
+    # UNSAT was under assumptions only: the solver stays reusable
+    assert s.ok
+    assert s.solve()[0] == SAT
+    assert s.solve(assumptions=[1, 2])[0] == SAT
+
+
+def test_cdcl_global_unsat_latches():
+    cnf = CNF()
+    cnf.n_vars = 1
+    cnf.add(1)
+    cnf.add(-1)
+    s = CDCLSolver(cnf)
+    assert s.solve()[0] == UNSAT
+    assert not s.ok
+    assert s.solve(assumptions=[1])[0] == UNSAT
+
+
+def test_cdcl_add_clauses_between_solves():
+    s = CDCLSolver()
+    s.add_clauses([(1, 2)], n_vars=2)
+    assert s.solve(assumptions=[-1])[0] == SAT
+    s.add_clauses([(-2,)])
+    st_, m = s.solve()
+    assert st_ == SAT and m[0] and not m[1]
+    assert s.solve(assumptions=[-1])[0] == UNSAT
+
+
+def test_cdcl_retains_learned_clauses_across_assumption_solves():
+    g = suite.get("gsm")
+    sess = SolverSession(EncoderSession(g, CGRA(3, 3)), method="cdcl")
+    seen = []
+    for ii in range(2, 7):
+        status, _, stats = sess.solve_complete(ii)
+        seen.append((ii, status, stats.learned_retained, stats.conflicts))
+    # the final SAT II starts with everything the UNSAT proofs derived
+    assert seen[-1][1] == SAT
+    retained = [r for (_, _, r, _) in seen]
+    assert retained[0] == 0 and retained[-1] > 0
+    assert retained == sorted(retained)   # never drops a learned clause
+
+
+# ---------------------------------------------- projection == cold encode
+@pytest.mark.parametrize("ii", [2, 3, 4, 5])
+def test_projection_equals_cold_encoding_pairwise(ii):
+    """With the pairwise AMO the per-II projection of the layered formula
+    is *clause-for-clause identical* to the cold encoder's CNF (selector
+    variables occur in no projected clause)."""
+    g = running_example()
+    ses = EncoderSession(g, CGRA(2, 2))
+    inc = IncrementalEncoding(ses)
+    a = sorted(tuple(sorted(c)) for c in inc.project(ii).clauses)
+    b = sorted(tuple(sorted(c)) for c in ses.encode(ii).cnf.clauses)
+    assert a == b
+
+
+@pytest.mark.parametrize("amo", ["pairwise", "sequential"])
+def test_assumption_statuses_match_cold_statuses(amo):
+    g = running_example()
+    sess = SolverSession(EncoderSession(g, CGRA(2, 2), amo), method="cdcl")
+    for ii in (2, 3, 4, 5):
+        st_inc, model, _ = sess.solve_complete(ii)
+        st_cold, _ = solve(encode(g, CGRA(2, 2), ii, amo).cnf, "cdcl")
+        assert st_inc == st_cold
+        if st_inc == SAT:
+            placement = sess.enc.decode(ii, model)
+            assert len(placement) == g.n
+
+
+# -------------------------------------- incremental == cold, per backend
+def _statuses(res):
+    return [(a.ii, a.status) for a in res.attempts]
+
+
+@pytest.mark.parametrize("solver", ["cdcl", "auto", "z3", "portfolio",
+                                    "walksat"])
+def test_incremental_equals_cold_per_backend(solver):
+    """Same final II, identical IIAttempt statuses, and a valid mapping —
+    for every backend, incremental (default) vs cold (reference)."""
+    if solver == "z3":
+        pytest.importorskip("z3")
+    cfg_inc = MapperConfig(solver=solver, timeout_s=90)
+    cfg_cold = MapperConfig(solver=solver, timeout_s=90, incremental=False)
+    for make in (running_example, lambda: suite.get("srand")):
+        g = make()
+        cgra = CGRA(2, 2) if g.name == "running_example" else CGRA(3, 3)
+        ri = map_loop(make(), cgra, cfg_inc)
+        rc = map_loop(make(), cgra, cfg_cold)
+        assert ri.success and rc.success
+        assert ri.ii == rc.ii
+        assert _statuses(ri) == _statuses(rc)
+        chk = verify_mapping(g, cgra, ri.placement, ri.ii, n_iters=6)
+        assert chk.ok, chk.errors
+
+
+@pytest.mark.parametrize("name", ["sha", "gsm", "nw"])
+def test_incremental_equals_cold_on_suite_kernels(name):
+    g = suite.get(name)
+    cgra = CGRA(3, 3)
+    ri = map_loop(g, cgra, MapperConfig(solver="auto", timeout_s=90))
+    rc = map_loop(suite.get(name), cgra,
+                  MapperConfig(solver="auto", timeout_s=90,
+                               incremental=False))
+    assert ri.ii == rc.ii and ri.success == rc.success
+    assert _statuses(ri) == _statuses(rc)
+
+
+def test_sweep_incremental_equals_sweep_cold():
+    for name in ["gsm", "bitcount"]:
+        cgra = CGRA(3, 3)
+        ri = map_loop(suite.get(name), cgra,
+                      MapperConfig(solver="auto", timeout_s=90),
+                      sweep_width=3)
+        rc = map_loop(suite.get(name), cgra,
+                      MapperConfig(solver="auto", timeout_s=90,
+                                   incremental=False), sweep_width=3)
+        assert ri.ii == rc.ii
+        assert ri.success and rc.success
+
+
+def test_solve_window_with_session_matches_cold_statuses():
+    g = running_example()
+    enc_session = EncoderSession(g, CGRA(2, 2))
+    sess = SolverSession(enc_session, method="cdcl")
+    iis = [2, 3, 4]
+    for ii in iis:
+        sess.ensure_ii(ii)
+    cnfs = [sess.project(ii) for ii in iis]
+    res = solve_window(cnfs, method="cdcl", seed=0, session=sess, iis=iis)
+    assert [r.status for r in res] == [UNSAT, SAT, SAT]
+    for ii, r in zip(iis, res):
+        if r.status == SAT:
+            placement = sess.enc.decode(ii, r.model)
+            assert len(placement) == g.n
+
+
+# ----------------------------------------------------- reuse statistics
+def test_iiattempt_surfaces_reuse_stats():
+    r = map_loop(suite.get("nw"), CGRA(3, 3),
+                 MapperConfig(solver="cdcl", timeout_s=90))
+    assert r.success and len(r.attempts) >= 2
+    for a in r.attempts:
+        assert a.via == "cdcl"
+        assert isinstance(a.learned_retained, int)
+        assert isinstance(a.conflicts, int)
+    # retention is cumulative across the II bumps
+    assert r.attempts[-1].learned_retained >= r.attempts[0].learned_retained
+
+
+def test_walksat_warm_start_reports_hamming():
+    sess = SolverSession(EncoderSession(running_example(), CGRA(2, 2)),
+                         method="walksat", walksat_steps=2000,
+                         walksat_batch=16)
+    st3, _, s3 = sess.solve_ii(3)
+    st4, _, s4 = sess.solve_ii(4)
+    assert st3 == SAT and st4 == SAT
+    assert s3.warm_hamming is None          # nothing to warm-start from
+    assert isinstance(s4.warm_hamming, int)  # seeded by II=3's model
+
+
+# ------------------------------------------------- AMO encoding property
+OPS = ["add", "sub", "mul", "xor", "and", "or"]
+
+
+@st.composite
+def small_dfg(draw):
+    n = draw(st.integers(4, 9))
+    g = DFG("rand")
+    g.add("iv")
+    g.add("const", imm=draw(st.integers(1, 50)))
+    for i in range(2, n):
+        op = draw(st.sampled_from(OPS))
+        a = draw(st.integers(0, i - 1))
+        b = draw(st.integers(0, i - 1))
+        g.add(op, [(a, 0), (b, 0)])
+    g.validate()
+    return g
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_dfg(), st.integers(1, 4))
+def test_amo_encodings_agree_on_random_dfgs(g, ii):
+    """Property: pairwise and Sinz-sequential AMO are equisatisfiable on
+    the KMS encodings — identical SAT/UNSAT outcome at every II."""
+    cgra = CGRA(2, 2)
+    ra = solve(encode(g, cgra, ii, "pairwise").cnf, "cdcl")[0]
+    rb = solve(encode(g, cgra, ii, "sequential").cnf, "cdcl")[0]
+    assert ra == rb
+
+
+@pytest.mark.parametrize("name", suite.names())
+def test_amo_encodings_same_final_ii_on_suite(name):
+    """Both AMO encodings drive the mapper to the identical final II on
+    every suite kernel (incremental core active in both runs)."""
+    cgra = CGRA(3, 3)
+    rp = map_loop(suite.get(name), cgra,
+                  MapperConfig(solver="auto", amo="pairwise", timeout_s=90))
+    rs = map_loop(suite.get(name), cgra,
+                  MapperConfig(solver="auto", amo="sequential",
+                               timeout_s=90))
+    assert rp.success == rs.success
+    assert rp.ii == rs.ii
