@@ -24,7 +24,7 @@ from .cgra import CGRA
 from .dfg import DFG
 from .encode import EncoderSession
 from .regalloc import RegAllocResult, allocate
-from .sat import SAT, solve
+from .sat import SAT, UNSAT, solve
 from .schedule import min_ii
 from .simulator import verify_mapping
 
@@ -48,6 +48,9 @@ class MapperConfig:
     # WalkSAT warm starts). False = the cold encode+solve-per-II reference
     # path (the paper-faithful Fig. 3 loop).
     incremental: bool = True
+    # learnt-clause database cap for the persistent CDCL (None = keep all;
+    # the mapping service sets a bound so long-lived sessions stay small)
+    max_learnt: Optional[int] = None
 
 
 @dataclass
@@ -62,9 +65,13 @@ class IIAttempt:
     regalloc_ok: Optional[bool] = None
     # incremental-core reuse statistics (None on the cold path)
     via: str = ""                            # backend that decided this II
+    #   via == "core": this II was *pruned* — a failed-assumption core
+    #   recorded earlier on the same session already refutes it, so the
+    #   UNSAT status is replayed without a solve (solve_time == 0)
     learned_retained: Optional[int] = None   # clauses carried into the solve
     conflicts: Optional[int] = None          # conflicts spent on this II
     warm_hamming: Optional[int] = None       # walksat init vs final model
+    evicted: Optional[int] = None            # learnt clauses evicted so far
 
 
 @dataclass
@@ -79,6 +86,9 @@ class MappingResult:
     total_time: float = 0.0
     mii: int = 0
     timed_out: bool = False
+    # per-request reuse statistics when the request was served by a
+    # MappingService (repro.core.service.RequestStats); None otherwise
+    service: Optional[object] = None
 
     @property
     def n_route_nodes(self) -> int:
@@ -112,7 +122,8 @@ def _try_ii(dfg: DFG, cgra: CGRA, ii: int, cfg: MapperConfig,
                         via=stats.via,
                         learned_retained=stats.learned_retained,
                         conflicts=stats.conflicts,
-                        warm_hamming=stats.warm_hamming)
+                        warm_hamming=stats.warm_hamming,
+                        evicted=stats.evicted)
         attempts.append(att)
         if status != SAT:
             return None
@@ -142,6 +153,24 @@ def _try_ii(dfg: DFG, cgra: CGRA, ii: int, cfg: MapperConfig,
     if not ra.ok:
         return None
     return placement, ra
+
+
+def note_pruned_ii(sess, ii: int, attempts: List[IIAttempt],
+                   route_nodes: int = 0) -> None:
+    """Replay an UNSAT verdict for ``ii`` from the session's recorded
+    failed-assumption cores — no encode, no solve. Shared by the
+    sequential loop and the sweep engine (both count it as a pruned II)."""
+    inc = sess.enc.inc
+    if inc.has_layer(ii):
+        st = sess.stats_for(ii)
+        n_vars, n_clauses = st["vars"], st["clauses"]
+    else:   # all_unsat latched before this layer was ever encoded
+        n_vars, n_clauses = inc.n_vars, inc.n_clauses
+    sess.pruned_total += 1
+    attempts.append(IIAttempt(
+        ii=ii, n_vars=n_vars, n_clauses=n_clauses, status=UNSAT,
+        solve_time=0.0, encode_time=0.0, route_nodes=route_nodes,
+        via="core"))
 
 
 def _session_var_of(sess, ii: int):
@@ -200,7 +229,8 @@ def _route_candidates(dfg: DFG) -> List[Tuple[int, int, int]]:
 
 
 def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
-             sweep_width: int = 1) -> MappingResult:
+             sweep_width: int = 1, service=None,
+             session=None) -> MappingResult:
     """Find the minimal feasible II.
 
     ``sweep_width=1`` is the paper-faithful sequential reference (this
@@ -209,11 +239,23 @@ def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
     through one shared EncoderSession and solves them concurrently —
     returning the same II as the sequential path. Routing retries
     (``cfg.routing``) are sequential-only and force ``sweep_width=1``.
+
+    ``service`` (a ``repro.core.service.MappingService``) routes the
+    request through the long-lived solver pool + mapping cache; ``None``
+    — the default — preserves the standalone behaviour. ``session``
+    injects an existing warm ``SolverSession`` whose formula matches this
+    (dfg, cgra, amo) shape — the service uses it to share one persistent
+    solver across requests; IIs the session has already refuted via a
+    failed-assumption core are skipped without a solve (via="core"
+    attempts).
     """
     cfg = cfg or MapperConfig()
+    if service is not None:
+        return service.map(dfg, cgra, cfg, sweep_width=sweep_width)
     if sweep_width > 1 and not cfg.routing:
         from .sweep import map_sweep   # local import: sweep imports us
-        return map_sweep(dfg, cgra, cfg, sweep_width=sweep_width)
+        return map_sweep(dfg, cgra, cfg, sweep_width=sweep_width,
+                         session=session)
     dfg.validate()
     t_start = time.time()
     deadline = t_start + cfg.timeout_s
@@ -224,17 +266,29 @@ def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
     # the persistent incremental core: one layered formula + live solver
     # for the whole loop. Routing retries splice nodes into the DFG (a
     # different formula), so those attempts always take the cold path.
-    sess = None
-    if cfg.incremental:
+    sess = session
+    if sess is None and cfg.incremental:
         from .sat.portfolio import SolverSession
         sess = SolverSession(EncoderSession(dfg, cgra, cfg.amo),
-                             method=cfg.solver, seed=cfg.seed)
+                             method=cfg.solver, seed=cfg.seed,
+                             max_learnt=cfg.max_learnt)
 
     for ii in range(mii, max_ii + 1):
         if time.time() > deadline:
             res.timed_out = True
             break
-        got = _try_ii(dfg, cgra, ii, cfg, deadline, res.attempts, sess=sess)
+        if sess is not None and sess.is_proven_unsat(ii):
+            # a recorded failed-assumption core already refutes this II on
+            # this session's formula: replay UNSAT without a solve. The
+            # routing branch below still runs — route nodes change the
+            # DFG, so a pruned plain II may yet map with routing.
+            note_pruned_ii(sess, ii, res.attempts)
+            got = None
+            if sess.all_unsat and not cfg.routing:
+                break   # empty core: every candidate II is refuted
+        else:
+            got = _try_ii(dfg, cgra, ii, cfg, deadline, res.attempts,
+                          sess=sess)
         cur_dfg = dfg
         if got is None and cfg.routing:
             # beyond-paper: retry this II with routing nodes spliced in

@@ -18,6 +18,28 @@ Incremental interface (the assumption-based sweep core):
     across calls — solving II=k+1 after II=k starts from everything the
     previous call derived, which is the whole point of the layered
     selector-literal encoding in ``repro.core.cnf.IncrementalCNF``.
+
+Service extensions (the long-lived ``repro.core.service`` process):
+
+  * **failed-assumption cores** — after an UNSAT-under-assumptions
+    verdict, ``last_core`` holds the subset of the assumption literals
+    that the final conflict actually depends on (MiniSat's
+    ``analyzeFinal``). An empty core means the formula itself is UNSAT
+    regardless of assumptions. ``last_core`` is ``None`` after SAT and —
+    critically — after every UNKNOWN: a ``max_conflicts`` budget
+    exhaustion or a cooperative ``stop()`` is *not* a refutation, and
+    callers that treat cores as proofs (the mapping service's II
+    pruning) must never see one for an undecided call. ``last_limit``
+    says which limit ended an UNKNOWN call ("conflicts" | "stop").
+  * **bounded learnt-clause database** — with ``max_learnt=N`` the
+    solver scores retained learnt clauses by (LBD, activity) and evicts
+    the worst down to ``N // 2`` whenever the database grows past ``N``.
+    Only clauses currently locked as propagation reasons are exempt
+    (soundness of the trail); glue/binary clauses merely *rank first*
+    under the LBD sort, so retention genuinely stays bounded. Eviction
+    only drops redundant lemmas, never input clauses, so correctness is
+    unaffected; ``evicted_total`` counts evictions for the service's
+    reuse stats.
 """
 from __future__ import annotations
 
@@ -51,7 +73,8 @@ def _luby(x: int) -> int:
 
 
 class CDCLSolver:
-    def __init__(self, cnf: Optional[CNF] = None):
+    def __init__(self, cnf: Optional[CNF] = None,
+                 max_learnt: Optional[int] = None):
         self.nv = 0
         self.clauses: List[List[int]] = []
         self.watches: Dict[int, List[int]] = {}
@@ -68,9 +91,22 @@ class CDCLSolver:
         self.ok = True
         self._units: List[int] = []
         self.n_input = 0          # input (non-learnt) clauses incl. units
-        self.n_learnt = 0         # clauses learned (and retained) so far
+        self.n_learnt = 0         # learnt clauses currently retained
         self.conflicts_total = 0  # across all solve() calls
         self.last_conflicts = 0   # conflicts of the latest solve() call
+        # learnt-clause database bound: None keeps every learnt clause
+        # forever (the PR 2 behaviour); an int N evicts down to N // 2 by
+        # (LBD asc, activity desc) whenever retention exceeds N.
+        self.max_learnt = max_learnt
+        self._learnt_meta: Dict[int, List[float]] = {}  # ci -> [act, lbd]
+        self.cla_inc = 1.0
+        self.evicted_total = 0
+        # failed-assumption core of the latest solve: a subset of the
+        # assumption literals whose conjunction is refuted ([] = the
+        # formula itself is UNSAT); None after SAT and after UNKNOWN
+        self.last_core: Optional[List[int]] = None
+        # which limit ended the latest UNKNOWN call: "conflicts" | "stop"
+        self.last_limit: Optional[str] = None
         if cnf is not None:
             self.add_clauses(cnf.clauses, n_vars=cnf.n_vars)
 
@@ -101,6 +137,13 @@ class CDCLSolver:
             if not self._add_clause(list(cl)):
                 self.ok = False
         return self.ok
+
+    @property
+    def learnt_db_size(self) -> int:
+        """Learnt clauses currently stored in the clause database (learnt
+        *units* are level-0 trail facts, not database entries, so
+        ``n_learnt`` may exceed this)."""
+        return len(self._learnt_meta)
 
     # ------------------------------------------------------------ plumbing
     def _value(self, lit: int) -> int:
@@ -208,6 +251,9 @@ class CDCLSolver:
         first = True
         while True:
             cl = self.clauses[ci]
+            meta = self._learnt_meta.get(ci)
+            if meta is not None:    # learnt clause used in analysis: bump
+                meta[0] += self.cla_inc
             start = 0 if first else 1
             # for reason clauses, cl[0] is the propagated literal
             for q in (cl if first else cl[1:] if cl[0] == lit else
@@ -249,6 +295,82 @@ class CDCLSolver:
         del self.trail_lim[lvl:]
         self.qhead = min(self.qhead, len(self.trail))
 
+    def _analyze_final(self, lit: int) -> List[int]:
+        """Failed-assumption core (MiniSat ``analyzeFinal``): the subset of
+        the current assumption literals whose conjunction is already
+        refuted, given that assumption ``lit`` was found falsified by
+        propagation from the clauses and the earlier assumptions. Walks the
+        implication graph backwards from ``¬lit``; every pseudo-decision it
+        reaches is an assumption that the refutation depends on."""
+        core = [lit]
+        if not self.trail_lim:
+            return core     # falsified at level 0: lit alone is refuted
+        seen = {abs(lit)}
+        for i in range(len(self.trail) - 1, self.trail_lim[0] - 1, -1):
+            q = self.trail[i]
+            v = abs(q)
+            if v not in seen:
+                continue
+            r = self.reason[v]
+            if r is None:
+                core.append(q)  # assumption pseudo-decision (as enqueued)
+            else:
+                for x in self.clauses[r]:
+                    if abs(x) != v and self.level[abs(x)] > 0:
+                        seen.add(abs(x))
+            seen.discard(v)
+        return core
+
+    # ------------------------------------------------- learnt-DB reduction
+    def _reduce_db(self) -> None:
+        """Evict the worst-scored learnt clauses down to ``max_learnt // 2``.
+
+        Scoring is MiniSat/Glucose-flavoured: LBD first (lower = closer to
+        a proof skeleton, so glue and binary clauses rank at the top),
+        activity second (recently useful in conflict analysis). Clauses
+        locked as the propagation reason of a currently-assigned variable
+        are always kept (required for soundness of the trail); everything
+        else competes for the ``max_learnt // 2`` slots, so retention
+        stays bounded. The clause list is compacted and watches / reason
+        indices remapped, so this is safe at any decision level."""
+        locked = {self.reason[abs(lit)] for lit in self.trail
+                  if self.reason[abs(lit)] is not None}
+        target = max(0, (self.max_learnt or 0) // 2)
+        ranked = sorted(self._learnt_meta.items(),
+                        key=lambda kv: (kv[1][1], -kv[1][0], len(self.clauses[kv[0]])))
+        keep = set()
+        for ci, (act, lbd) in ranked:
+            if ci in locked or len(keep) < target:
+                keep.add(ci)
+        dropped = len(self._learnt_meta) - len(keep)
+        if dropped == 0:
+            return
+        remap: Dict[int, int] = {}
+        new_clauses: List[List[int]] = []
+        for ci, cl in enumerate(self.clauses):
+            if ci in self._learnt_meta and ci not in keep:
+                continue
+            remap[ci] = len(new_clauses)
+            new_clauses.append(cl)
+        self.clauses = new_clauses
+        self._learnt_meta = {remap[ci]: meta
+                             for ci, meta in self._learnt_meta.items()
+                             if ci in keep}
+        for v in range(1, self.nv + 1):
+            r = self.reason[v]
+            if self.assign[v] != 0 and r is not None:
+                self.reason[v] = remap[r]   # locked => kept => remappable
+            else:
+                self.reason[v] = None       # stale entry of an unassigned var
+        # positions 0/1 are exactly the watched literals (the propagate
+        # loop maintains that invariant), so rebuilding from them is exact
+        self.watches = {}
+        for ci, cl in enumerate(self.clauses):
+            self._watch(cl[0], ci)
+            self._watch(cl[1], ci)
+        self.n_learnt -= dropped
+        self.evicted_total += dropped
+
     # ---------------------------------------------------------------- main
     def solve(self, max_conflicts: Optional[int] = None,
               phase_hint: Optional[List[bool]] = None,
@@ -267,22 +389,38 @@ class CDCLSolver:
         UNSAT and the solver latches ``ok=False``. The solver object is
         reusable after any outcome; learned clauses, activities, and
         phases carry over to the next call.
+
+        Verdict bookkeeping for incremental callers: UNSAT sets
+        ``last_core`` (failed-assumption subset; ``[]`` when the formula
+        is UNSAT regardless of assumptions), while an exhausted
+        ``max_conflicts`` budget or a fired ``stop`` returns UNKNOWN with
+        ``last_core=None`` and ``last_limit`` saying which limit hit —
+        a budget exhaustion under assumptions is *undecided*, never a
+        proven-UNSAT II.
         """
         from . import SAT, UNSAT, UNKNOWN
+        self.last_core = None
+        self.last_limit = None
         if not self.ok:
+            self.last_core = []
             return UNSAT, None
         assumptions = assumptions or []
         self._backtrack(0)
         self.qhead = 0
+        if self.max_learnt is not None \
+                and len(self._learnt_meta) > self.max_learnt:
+            self._reduce_db()
         if phase_hint:
             for v in range(1, min(self.nv, len(phase_hint)) + 1):
                 self.saved_phase[v] = bool(phase_hint[v - 1])
         for u in self._units:
             if not self._enqueue(u, None):
                 self.ok = False
+                self.last_core = []
                 return UNSAT, None
         if self._propagate() is not None:
             self.ok = False
+            self.last_core = []
             return UNSAT, None
         conflicts = 0
         self.last_conflicts = 0
@@ -293,6 +431,7 @@ class CDCLSolver:
             while True:
                 ticks += 1
                 if stop is not None and ticks % 256 == 0 and stop():
+                    self.last_limit = "stop"
                     return UNKNOWN, None
                 confl = self._propagate()
                 if confl is not None:
@@ -301,6 +440,7 @@ class CDCLSolver:
                     self.last_conflicts = conflicts
                     if len(self.trail_lim) == 0:
                         self.ok = False
+                        self.last_core = []
                         return UNSAT, None
                     learnt, bt = self._analyze(confl)
                     self._backtrack(bt)
@@ -308,6 +448,7 @@ class CDCLSolver:
                     if len(learnt) == 1:
                         if not self._enqueue(learnt[0], None):
                             self.ok = False
+                            self.last_core = []
                             return UNSAT, None
                     else:
                         ci = len(self.clauses)
@@ -315,8 +456,19 @@ class CDCLSolver:
                         self._watch(learnt[0], ci)
                         self._watch(learnt[1], ci)
                         self._enqueue(learnt[0], ci)
+                        lbd = len({self.level[abs(q)] for q in learnt})
+                        self._learnt_meta[ci] = [self.cla_inc, lbd]
                     self.var_inc *= 1.0 / 0.95
+                    self.cla_inc *= 1.0 / 0.999
+                    if self.cla_inc > 1e20:
+                        for meta in self._learnt_meta.values():
+                            meta[0] *= 1e-20
+                        self.cla_inc *= 1e-20
+                    if self.max_learnt is not None \
+                            and len(self._learnt_meta) > self.max_learnt:
+                        self._reduce_db()
                     if max_conflicts is not None and conflicts >= max_conflicts:
+                        self.last_limit = "conflicts"
                         return UNKNOWN, None
                     if conflicts >= budget:
                         restart_idx += 1
@@ -330,6 +482,7 @@ class CDCLSolver:
                     if val == -1:
                         # falsified by propagation from clauses + earlier
                         # assumptions: UNSAT under these assumptions only
+                        self.last_core = self._analyze_final(lit)
                         return UNSAT, None
                     self.trail_lim.append(len(self.trail))
                     if val == 0:

@@ -45,7 +45,7 @@ import warnings
 from concurrent.futures import (FIRST_COMPLETED, ProcessPoolExecutor,
                                 ThreadPoolExecutor, wait as futures_wait)
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -155,6 +155,11 @@ class SolveStats:
     conflicts: Optional[int] = None          # conflicts of this call
     warm_hamming: Optional[int] = None       # warm-start init vs final model
     via: str = ""
+    # failed-assumption core of an UNSAT verdict (subset of the selector
+    # assumptions; [] = formula UNSAT regardless of II); None when the
+    # call was SAT/UNKNOWN or the backend produced no core
+    core: Optional[List[int]] = None
+    evicted: Optional[int] = None            # learnt clauses evicted so far
 
 
 class SolverSession:
@@ -170,11 +175,20 @@ class SolverSession:
 
     The cold path (fresh encode+solve per II) remains available via
     ``MapperConfig(incremental=False)`` as the equivalence reference.
+
+    Service extensions: ``max_learnt`` bounds the persistent CDCL's
+    learnt-clause database (a long-lived session survives thousands of
+    sweeps with bounded memory); every UNSAT verdict's failed-assumption
+    core is recorded in ``proven_unsat`` so later sweeps through the same
+    session skip provably-UNSAT IIs without re-solving them
+    (``is_proven_unsat`` / ``proven_lower_bound``), and an *empty* core
+    latches ``all_unsat`` — the formula is UNSAT at every II.
     """
 
     def __init__(self, enc_session, method: str = "auto", seed: int = 0,
                  walksat_steps: Optional[int] = None,
-                 walksat_batch: Optional[int] = None):
+                 walksat_batch: Optional[int] = None,
+                 max_learnt: Optional[int] = None):
         from . import resolve_method
         from ..encode import IncrementalEncoding
         self.enc = IncrementalEncoding(enc_session)
@@ -191,6 +205,7 @@ class SolverSession:
         else:
             self.walksat_steps = walksat_steps or 20000
             self.walksat_batch = walksat_batch or 64
+        self.max_learnt = max_learnt
         self._cdcl = None
         self._z3 = None
         self._synced = 0                      # clauses pushed to the backend
@@ -198,6 +213,10 @@ class SolverSession:
         self.best_quality: Optional[int] = None         # unsat count (0=model)
         self._best_lock = threading.Lock()    # racer threads update warm state
         self.n_solves = 0
+        # II -> failed-assumption core that refuted it (proof, not budget)
+        self.proven_unsat: Dict[int, Tuple[int, ...]] = {}
+        self.all_unsat = False                # an empty core arrived
+        self.pruned_total = 0                 # IIs skipped via a recorded core
 
     # ------------------------------------------------------------- formula
     def ensure_ii(self, ii: int) -> None:
@@ -217,8 +236,43 @@ class SolverSession:
             return self._z3
         if self._cdcl is None:
             from .cdcl import CDCLSolver
-            self._cdcl = CDCLSolver()
+            self._cdcl = CDCLSolver(max_learnt=self.max_learnt)
         return self._cdcl
+
+    # --------------------------------------------------- UNSAT-core pruning
+    def is_proven_unsat(self, ii: int) -> bool:
+        """True when a failed-assumption core already refutes ``ii`` on
+        this session's formula — solving it again is pure waste."""
+        return self.all_unsat or ii in self.proven_unsat
+
+    def note_core(self, ii: int, core: Optional[List[int]]) -> None:
+        """Record an UNSAT verdict's failed-assumption core for ``ii``.
+        Callers must only pass cores from *proven* UNSAT answers (the
+        backends leave ``last_core=None`` on budget/stop UNKNOWNs, so a
+        budget exhaustion can never be mislabeled as a refuted II)."""
+        if core is None:
+            return
+        self.proven_unsat[ii] = tuple(core)
+        if not core:
+            # empty core: the refutation used no assumption at all — the
+            # base formula is UNSAT, so every candidate II is
+            self.all_unsat = True
+
+    def proven_lower_bound(self, start_ii: int) -> int:
+        """Smallest II >= ``start_ii`` not already refuted by a recorded
+        core — the II lower bound this session can prove without solving."""
+        ii = start_ii
+        while self.is_proven_unsat(ii) and not self.all_unsat:
+            ii += 1
+        return ii
+
+    @property
+    def clauses_evicted(self) -> int:
+        return self._cdcl.evicted_total if self._cdcl is not None else 0
+
+    @property
+    def learnt_db_size(self) -> int:
+        return self._cdcl.learnt_db_size if self._cdcl is not None else 0
 
     def _sync(self):
         """Push clauses encoded since the last solve into the live solver
@@ -245,12 +299,19 @@ class SolverSession:
             status, model = backend.solve(assumptions=assumptions, stop=stop,
                                           phase_hint=phase_hint)
             stats.conflicts = backend.last_conflicts
+            stats.evicted = backend.evicted_total or None
         else:
             status, model = backend.solve(assumptions=assumptions, stop=stop)
             zst = backend.stats()
             stats.conflicts = int(zst.get("conflicts", 0)) or None
         self.n_solves += 1
-        from . import SAT
+        from . import SAT, UNSAT
+        if status == UNSAT:
+            # the failed-assumption core proves this II infeasible on this
+            # formula forever; backends leave it None on budget/stop
+            # UNKNOWNs, so only real refutations are recorded
+            stats.core = getattr(backend, "last_core", None)
+            self.note_core(ii, stats.core)
         if status == SAT and model:
             self.update_best(model, 0)
         return status, model, stats

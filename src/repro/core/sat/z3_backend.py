@@ -24,6 +24,11 @@ class Z3IncrementalSolver:
         self.xs: List = [None]      # xs[v] = Bool for var v (1-based)
         self.n_clauses = 0
         self.unsat_latched = False  # an unguarded empty clause arrived
+        # failed-assumption core of the latest solve (subset of the
+        # assumption literals, as ints); None after SAT / UNKNOWN —
+        # mirrors CDCLSolver.last_core so SolverSession treats both
+        # complete backends identically
+        self.last_core: Optional[List[int]] = None
 
     def grow_vars(self, n_vars: int) -> None:
         z3 = self._z3
@@ -52,13 +57,15 @@ class Z3IncrementalSolver:
               ) -> Tuple[str, Optional[List[bool]]]:
         z3 = self._z3
         from . import SAT, UNSAT, UNKNOWN
+        self.last_core = None
         if self.unsat_latched:
+            self.last_core = []
             return UNSAT, None
         if stop is not None and stop():
             return UNKNOWN, None
         xs = self.xs
-        assumed = [xs[l] if l > 0 else z3.Not(xs[-l])
-                   for l in (assumptions or [])]
+        assumptions = assumptions or []
+        assumed = [xs[l] if l > 0 else z3.Not(xs[-l]) for l in assumptions]
         # cooperative cancellation: bounded solve slices, polling ``stop``
         # between slices (z3 releases the GIL inside check())
         self.solver.set("timeout", 500 if stop is not None else 0)
@@ -69,6 +76,16 @@ class Z3IncrementalSolver:
                 return SAT, [z3.is_true(m[xs[v]])
                              for v in range(1, len(xs))]
             if res == z3.unsat:
+                # failed-assumption core: z3 returns the subset of the
+                # check() assumptions in the final conflict; map the
+                # exprs back to our ints positionally
+                try:
+                    core_exprs = self.solver.unsat_core()
+                    self.last_core = [lit for lit, e in
+                                      zip(assumptions, assumed)
+                                      if any(e.eq(c) for c in core_exprs)]
+                except Exception:
+                    self.last_core = list(assumptions)  # sound over-approx
                 return UNSAT, None
             if stop is None or stop():
                 return UNKNOWN, None

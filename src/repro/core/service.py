@@ -1,0 +1,292 @@
+"""Persistent mapping service: solver pool + canonical-DFG mapping cache.
+
+The Fig. 3 loop made incremental *within* one kernel's II sweep (PR 2)
+still rebuilds everything — layout, layered formula, live solver — on
+every ``map_loop``/``run_suite``/``map_cgra`` call. A long-lived serving
+process does better: repeated and structurally-similar requests should
+skip encode+solve entirely or start warm. :class:`MappingService` is that
+process-lifetime owner:
+
+  * **mapping cache** — requests are keyed by the canonical DFG signature
+    (full structural identity: ops, immediates, edges) plus the CGRA
+    topology signature and the mapper config; an identical request
+    returns the cached :class:`~repro.core.mapper.MappingResult` without
+    touching a solver (``via="cache"``).
+  * **solver pool** — cache misses are routed to a pooled
+    :class:`~repro.core.sat.portfolio.SolverSession` keyed by
+    (topology signature, DFG *shape class*): the shape class is exactly
+    what the SAT encoding depends on (per-node mem-capability and the
+    edge/distance structure — ops and immediates are irrelevant to the
+    clauses), so any two requests in one class share a single persistent
+    layered formula and live solver. A reused session starts with every
+    learnt clause, variable activity, saved phase, and warm-start
+    assignment its earlier requests derived — and with their
+    failed-assumption cores, so the II sweep *skips* IIs the session has
+    already refuted (``via="core"`` attempts, no solve).
+  * **bounded memory** — pool sessions cap the persistent CDCL's learnt
+    database (``max_learnt``, see ``CDCLSolver._reduce_db``) and the pool
+    and cache are LRU-bounded, so a service process survives thousands of
+    sweeps without unbounded growth.
+
+``map_loop(..., service=svc)``, ``map_sweep(..., service=svc)`` and
+``run_suite(..., service=svc)`` all route here; ``service=None`` (the
+default everywhere) preserves the standalone one-shot behaviour.
+``get_service()`` returns a process-wide default instance (used by
+``launch/map_cgra.py --service`` and ``launch/serve.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from copy import copy
+from dataclasses import astuple, dataclass, field
+from typing import Dict, Hashable, Optional, Tuple
+
+from .cgra import CGRA
+from .dfg import DFG
+from .encode import EncoderSession
+from .mapper import MapperConfig, MappingResult, map_loop
+from .sat.portfolio import SolverSession
+
+# ----------------------------------------------------------------- keys
+
+
+def topology_signature(cgra: CGRA) -> Tuple:
+    """Everything the encoding reads off the CGRA: geometry, inter-PE
+    reachability (topology) and memory capability. ``n_regs`` is included
+    because register allocation — part of the Fig. 3 accept criterion —
+    depends on it."""
+    return (cgra.rows, cgra.cols, cgra.topology, cgra.n_regs, cgra.mem_pes)
+
+
+def shape_signature(dfg: DFG) -> Tuple:
+    """The DFG *shape class*: exactly what the SAT encoding depends on.
+
+    The clause families (C1/C2/C3) read node count, per-node memory
+    capability (allowed-PE sets), and the edge/distance structure
+    (ASAP/ALAP windows and MII derive from these) — never the opcodes or
+    immediates. Two DFGs with equal shape signatures therefore produce
+    *identical* CNFs under one variable numbering, so they can share a
+    pooled ``SolverSession`` (learnt clauses, phases, warm starts, and
+    proven-UNSAT cores all transfer soundly)."""
+    nodes = tuple(
+        (nid, dfg.nodes[nid].is_mem, len(dfg.nodes[nid].ins))
+        for nid in sorted(dfg.nodes))
+    edges = tuple(sorted(dfg.edges()))
+    return (len(dfg.nodes), nodes, edges)
+
+
+def dfg_signature(dfg: DFG) -> Tuple:
+    """Full canonical identity of the mapping *request*: shape plus ops
+    and immediates (the simulator oracle and therefore the verified
+    result depend on them). Node names are display-only and excluded, so
+    re-traced copies of the same loop body hit the cache."""
+    nodes = tuple((nid, dfg.nodes[nid].op, dfg.nodes[nid].imm,
+                   dfg.nodes[nid].ins) for nid in sorted(dfg.nodes))
+    return (nodes,)
+
+
+# ---------------------------------------------------------------- stats
+
+
+@dataclass
+class RequestStats:
+    """Per-request reuse report, attached to ``MappingResult.service``."""
+    via: str                       # "cache" | "warm" | "cold"
+    cache_hit: bool = False
+    session_reused: bool = False
+    iis_pruned: int = 0            # IIs skipped via failed-assumption cores
+    clauses_evicted: int = 0       # learnt clauses evicted during this request
+    learned_retained: int = 0      # learnt DB size after the request
+    request_time: float = 0.0
+
+
+@dataclass
+class ServiceStats:
+    """Cumulative service counters (monotone over the process lifetime)."""
+    requests: int = 0
+    cache_hits: int = 0
+    sessions_created: int = 0
+    sessions_reused: int = 0
+    iis_pruned: int = 0
+    clauses_evicted: int = 0
+    cache_evictions: int = 0
+    session_evictions: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return {k: getattr(self, k) for k in (
+            "requests", "cache_hits", "sessions_created", "sessions_reused",
+            "iis_pruned", "clauses_evicted", "cache_evictions",
+            "session_evictions")}
+
+
+@dataclass
+class _PoolEntry:
+    session: SolverSession
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    requests: int = 0
+
+
+# -------------------------------------------------------------- service
+
+
+class MappingService:
+    """Long-lived mapping front end: cache first, warm pooled session
+    second, cold session only for a topology/shape never seen before.
+
+    Thread-safe: the pool/cache dictionaries are guarded by one service
+    lock, and each pooled session carries its own lock so concurrent
+    requests for *different* shapes solve in parallel while two requests
+    for the same shape serialise on their shared solver (its trail and
+    learnt database are single-threaded state).
+    """
+
+    def __init__(self, max_sessions: int = 64, cache_size: int = 512,
+                 max_learnt: Optional[int] = 100_000):
+        self.max_sessions = max_sessions
+        self.cache_size = cache_size
+        self.max_learnt = max_learnt
+        self._pool: "OrderedDict[Hashable, _PoolEntry]" = OrderedDict()
+        self._cache: "OrderedDict[Hashable, MappingResult]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = ServiceStats()
+
+    # ------------------------------------------------------------ internals
+    def _session_for(self, dfg: DFG, cgra: CGRA, cfg: MapperConfig,
+                     ) -> Tuple[_PoolEntry, bool]:
+        """Get-or-create the pooled session for this request's
+        (topology, shape class, solver-relevant config) key. The resolved
+        learnt-DB cap is part of the key: a request that asks for a
+        different memory bound must not silently inherit (or impose) a
+        pooled session's cap."""
+        cap = cfg.max_learnt if cfg.max_learnt is not None \
+            else self.max_learnt
+        key = (topology_signature(cgra), shape_signature(dfg),
+               cfg.amo, cfg.solver, cfg.seed, cap)
+        with self._lock:
+            entry = self._pool.get(key)
+            if entry is not None:
+                self._pool.move_to_end(key)
+                self.stats.sessions_reused += 1
+                return entry, True
+            entry = _PoolEntry(SolverSession(
+                EncoderSession(dfg, cgra, cfg.amo), method=cfg.solver,
+                seed=cfg.seed, max_learnt=cap))
+            self._pool[key] = entry
+            self.stats.sessions_created += 1
+            while len(self._pool) > self.max_sessions:
+                self._pool.popitem(last=False)
+                self.stats.session_evictions += 1
+            return entry, False
+
+    def _cache_key(self, dfg: DFG, cgra: CGRA, cfg: MapperConfig,
+                   sweep_width: int) -> Hashable:
+        return (dfg_signature(dfg), topology_signature(cgra),
+                astuple(cfg), sweep_width)
+
+    # --------------------------------------------------------------- API
+    def map(self, dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
+            sweep_width: int = 1, use_cache: bool = True) -> MappingResult:
+        """Serve one mapping request.
+
+        Identical requests (same canonical DFG, topology, config) return
+        the cached result; same-*shape* requests reuse the pooled warm
+        session (core-pruned IIs, retained learnt clauses); everything
+        else runs a cold session that immediately joins the pool.
+        ``use_cache=False`` forces a solve while still using the pool —
+        the warm-vs-cold comparison knob for benchmarks. The returned
+        result carries a :class:`RequestStats` in ``.service``; cached
+        results are shallow copies sharing placement/attempt objects, so
+        treat them as read-only.
+        """
+        cfg = cfg or MapperConfig()
+        t0 = time.time()
+        key = self._cache_key(dfg, cgra, cfg, sweep_width)
+        with self._lock:
+            self.stats.requests += 1
+            if use_cache and key in self._cache:
+                self._cache.move_to_end(key)
+                self.stats.cache_hits += 1
+                hit = copy(self._cache[key])
+                hit.service = RequestStats(
+                    via="cache", cache_hit=True,
+                    request_time=time.time() - t0)
+                return hit
+
+        if not cfg.incremental:
+            # cold escape hatch: the paper-faithful per-II reference path,
+            # no session pooling (still cached — determinism is cheap)
+            res = map_loop(dfg, cgra, cfg, sweep_width=sweep_width)
+            res.service = RequestStats(via="cold",
+                                       request_time=time.time() - t0)
+        else:
+            entry, reused = self._session_for(dfg, cgra, cfg)
+            with entry.lock:
+                sess = entry.session
+                entry.requests += 1
+                pruned0 = sess.pruned_total
+                evicted0 = sess.clauses_evicted
+                res = map_loop(dfg, cgra, cfg, sweep_width=sweep_width,
+                               session=sess)
+                res.service = RequestStats(
+                    via="warm" if reused else "cold",
+                    session_reused=reused,
+                    iis_pruned=sess.pruned_total - pruned0,
+                    clauses_evicted=sess.clauses_evicted - evicted0,
+                    learned_retained=sess.learnt_db_size,
+                    request_time=time.time() - t0)
+            with self._lock:
+                self.stats.iis_pruned += res.service.iis_pruned
+                self.stats.clauses_evicted += res.service.clauses_evicted
+
+        if not res.timed_out:
+            # a timed-out verdict reflects this request's budget, not the
+            # problem — let an identical later request retry with its own
+            with self._lock:
+                self._cache[key] = res
+                self._cache.move_to_end(key)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                    self.stats.cache_evictions += 1
+        return res
+
+    # ---------------------------------------------------------- inspection
+    @property
+    def n_sessions(self) -> int:
+        with self._lock:
+            return len(self._pool)
+
+    @property
+    def n_cached(self) -> int:
+        with self._lock:
+            return len(self._cache)
+
+    def describe(self) -> Dict[str, int]:
+        d = self.stats.snapshot()
+        d["sessions"] = self.n_sessions
+        d["cached_results"] = self.n_cached
+        return d
+
+
+# ------------------------------------------------- process-wide default
+
+_DEFAULT: Optional[MappingService] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def get_service() -> MappingService:
+    """The process-wide default service (launch drivers share it so every
+    report/request in one process benefits from the same warm pool)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = MappingService()
+        return _DEFAULT
+
+
+def reset_service() -> None:
+    """Drop the process-wide default (tests)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        _DEFAULT = None

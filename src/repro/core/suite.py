@@ -36,7 +36,8 @@ def all_dfgs() -> Dict[str, DFG]:
 
 
 def run_suite(cgra, cfg=None, sweep_width: int = 1,
-              names_subset: Optional[List[str]] = None) -> Dict[str, object]:
+              names_subset: Optional[List[str]] = None,
+              service=None) -> Dict[str, object]:
     """Map every suite kernel on ``cgra`` and return {name: MappingResult}.
 
     ``sweep_width=1`` runs the paper-faithful sequential Fig. 3 loop;
@@ -44,12 +45,19 @@ def run_suite(cgra, cfg=None, sweep_width: int = 1,
     (``repro.core.sweep``). The two modes find the same II on every kernel
     (asserted by tests/test_sweep.py); this is the convenience entry point
     for batch runs over the whole suite.
+
+    ``service`` (a ``repro.core.service.MappingService``) routes every
+    kernel through the long-lived solver pool + mapping cache — a second
+    ``run_suite`` pass through the same service starts warm (cache hits,
+    reused sessions, core-pruned IIs). ``None`` preserves the standalone
+    per-kernel behaviour.
     """
     from .mapper import MapperConfig, map_loop
     cfg = cfg or MapperConfig()
     out: Dict[str, object] = {}
     for name in (names_subset or names()):
-        out[name] = map_loop(get(name), cgra, cfg, sweep_width=sweep_width)
+        out[name] = map_loop(get(name), cgra, cfg, sweep_width=sweep_width,
+                             service=service)
     return out
 
 

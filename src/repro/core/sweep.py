@@ -49,7 +49,7 @@ from typing import Dict, List, Optional, Tuple
 from .cgra import CGRA
 from .dfg import DFG
 from .encode import EncoderSession, Encoding
-from .mapper import IIAttempt, MapperConfig, MappingResult
+from .mapper import (IIAttempt, MapperConfig, MappingResult, note_pruned_ii)
 from .regalloc import RegAllocResult, allocate
 from .sat import SAT, UNKNOWN, UNSAT
 from .sat.portfolio import solve_window
@@ -58,7 +58,8 @@ from .simulator import verify_mapping
 
 
 def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
-              sweep_width: int = 4) -> MappingResult:
+              sweep_width: int = 4, service=None,
+              session=None) -> MappingResult:
     """Map ``dfg`` onto ``cgra`` by sweeping candidate IIs in parallel
     windows of ``sweep_width``. Drop-in replacement for
     ``mapper.map_loop`` (which delegates here for ``sweep_width > 1``).
@@ -69,8 +70,19 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
     (CDCL phase hints from a heuristic placement) is likewise
     sequential-only: pool workers solve bare CNFs, so the hint is not
     applied here.
+
+    ``service`` routes the request through a long-lived
+    ``repro.core.service.MappingService`` (None = standalone, today's
+    behaviour); ``session`` injects a warm ``SolverSession`` whose
+    formula matches this (dfg, cgra, amo) shape. Candidate IIs the
+    session has already refuted via a failed-assumption core are dropped
+    from the window without a solve and recorded as via="core" UNSAT
+    attempts — the window then spends its parallelism on undecided IIs
+    only.
     """
     cfg = cfg or MapperConfig()
+    if service is not None:
+        return service.map(dfg, cgra, cfg, sweep_width=sweep_width)
     if cfg.routing:
         raise ValueError("map_sweep does not support routing=True; "
                          "use map_loop(sweep_width=1)")
@@ -82,21 +94,39 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
     mii = min_ii(dfg, cgra)
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
     res = MappingResult(success=False, mii=mii, cgra=cgra)
-    session = EncoderSession(dfg, cgra, cfg.amo)
+    sess = session
+    enc_session = sess.enc.session if sess is not None \
+        else EncoderSession(dfg, cgra, cfg.amo)
     # the incremental core: one persistent layered formula + live complete
     # solver across every window of the sweep (see portfolio.SolverSession);
     # cfg.incremental=False keeps the cold per-II encode+solve reference.
-    sess = None
-    if cfg.incremental:
+    if sess is None and cfg.incremental:
         from .sat.portfolio import SolverSession
-        sess = SolverSession(session, method=cfg.solver, seed=cfg.seed)
+        sess = SolverSession(enc_session, method=cfg.solver, seed=cfg.seed,
+                             max_learnt=cfg.max_learnt)
 
     base = mii
     while base <= max_ii:
         if time.time() > deadline:
             res.timed_out = True
             break
-        iis = list(range(base, min(base + sweep_width - 1, max_ii) + 1))
+        if sess is not None and sess.all_unsat:
+            # an empty failed-assumption core latched the session: the base
+            # formula is UNSAT, no candidate II can ever map
+            note_pruned_ii(sess, base, res.attempts)
+            break
+        window = list(range(base, min(base + sweep_width - 1, max_ii) + 1))
+        # replay recorded UNSAT cores up front: those IIs never enter the
+        # window, so its parallelism is spent on undecided candidates only
+        iis: List[int] = []
+        for ii in window:
+            if sess is not None and sess.is_proven_unsat(ii):
+                note_pruned_ii(sess, ii, res.attempts)
+            else:
+                iis.append(ii)
+        if not iis:
+            base = window[-1] + 1
+            continue
         encs: List[Encoding] = []
         enc_times: List[float] = []
         cnfs = []
@@ -107,7 +137,7 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
                 sess.ensure_ii(ii)
                 stats_list.append(sess.stats_for(ii))
             else:
-                encs.append(session.encode(ii))
+                encs.append(enc_session.encode(ii))
                 stats_list.append(encs[-1].stats)
             enc_times.append(time.time() - t0)
         if sess is not None:
@@ -151,6 +181,7 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
                 att.learned_retained = r.stats.learned_retained
                 att.conflicts = r.stats.conflicts
                 att.warm_hamming = r.stats.warm_hamming
+                att.evicted = r.stats.evicted
             if i in placements:
                 att.regalloc_ok = placements[i][1].ok
             res.attempts.append(att)
@@ -183,7 +214,7 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
         if blocked:
             res.timed_out = time.time() > deadline
             break
-        base = iis[-1] + 1
+        base = window[-1] + 1
 
     res.total_time = time.time() - t_start
     return res

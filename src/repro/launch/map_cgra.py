@@ -73,6 +73,12 @@ def main() -> None:
                     help="disable the incremental assumption-based solver "
                          "core (fresh encode+solve per II, the paper-"
                          "faithful reference)")
+    ap.add_argument("--service", action="store_true",
+                    help="route every mapping through the process-wide "
+                         "MappingService (solver pool + mapping cache) and "
+                         "run a second warm pass: repeated loops hit the "
+                         "cache, same-shape loops reuse warm sessions and "
+                         "skip core-refuted IIs")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="print per-II attempt lines with solver reuse "
                          "stats (learned clauses retained, conflicts, "
@@ -84,16 +90,25 @@ def main() -> None:
     cfg = get_config(args.arch)
     cgra = cgra_from_name(args.cgra)
     mode = "cold" if args.cold else "incremental"
+    service = None
+    if args.service:
+        from ..core.service import get_service
+        service = get_service()
+        mode += "+service"
     print(f"CGRA offload report: {cfg.name} on {cgra} "
           f"[amo={args.amo}, {mode}]")
     for name, fn, n_carry, loads in loops_for(cfg):
         g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
         r = map_loop(g, cgra, MapperConfig(
             solver="auto", timeout_s=60, routing=args.routing, amo=args.amo,
-            incremental=not args.cold))
+            incremental=not args.cold), service=service)
         status = f"II={r.ii} (MII={r.mii})" if r.success else "NO MAPPING"
         line = (f"  {name:16s} nodes={g.n:2d}  {status}  "
                 f"[seq {r.total_time:.2f}s, {len(r.attempts)} attempts]")
+        if r.service is not None:
+            line += (f"  [svc via={r.service.via}"
+                     f" pruned={r.service.iis_pruned}"
+                     f" evicted={r.service.clauses_evicted}]")
         if args.sweep > 1:
             g2, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
                                     name=name)
@@ -120,6 +135,21 @@ def main() -> None:
                       f"vars={a.n_vars} clauses={a.n_clauses} "
                       f"enc={a.encode_time*1e3:.1f}ms "
                       f"solve={a.solve_time*1e3:.1f}ms{reuse}")
+    if service is not None:
+        # warm pass: identical requests — every loop should come back from
+        # the mapping cache without touching a solver
+        import time as _time
+        t0 = _time.time()
+        for name, fn, n_carry, loads in loops_for(cfg):
+            g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
+                                   name=name)
+            r = map_loop(g, cgra, MapperConfig(
+                solver="auto", timeout_s=60, routing=args.routing,
+                amo=args.amo, incremental=not args.cold), service=service)
+            print(f"  warm {name:16s} II={r.ii} via={r.service.via} "
+                  f"[{r.service.request_time*1e3:.1f}ms]")
+        print(f"  warm pass total {_time.time()-t0:.2f}s; "
+              f"service: {service.describe()}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,13 @@
 
 The same decode_step is what launch/dryrun.py lowers for the decode_32k /
 long_500k shapes on the 512-chip production meshes.
+
+``--offload-cgra SIZE`` additionally maps the architecture's
+representative scalar inner loops onto a CGRA sidecar at startup through
+the process-wide :class:`repro.core.service.MappingService` — the same
+pool/cache every other driver in this process shares, so repeated serve
+launches (and the map_cgra report) reuse warm solver sessions instead of
+re-solving from scratch.
 """
 from __future__ import annotations
 
@@ -19,6 +26,28 @@ from ..models.model import LM
 from .mesh import make_host_mesh
 
 
+def offload_report(cfg, cgra_name: str) -> None:
+    """Map the arch's offloadable inner loops via the shared service."""
+    from ..core.cgra import cgra_from_name
+    from ..core.frontend import trace_loop_body
+    from ..core.mapper import MapperConfig, map_loop
+    from ..core.service import get_service
+    from .map_cgra import loops_for
+
+    service = get_service()
+    cgra = cgra_from_name(cgra_name)
+    print(f"CGRA offload ({cgra}) via MappingService:")
+    for name, fn, n_carry, loads in loops_for(cfg):
+        g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
+        r = map_loop(g, cgra, MapperConfig(solver="auto", timeout_s=60),
+                     service=service)
+        status = f"II={r.ii}" if r.success else "NO MAPPING"
+        print(f"  {name:16s} {status} via={r.service.via} "
+              f"pruned={r.service.iis_pruned} "
+              f"[{r.service.request_time*1e3:.1f}ms]")
+    print(f"  service: {service.describe()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="musicgen_large")
@@ -26,9 +55,15 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--offload-cgra", default=None, metavar="RxC",
+                    help="also map this arch's scalar inner loops onto a "
+                         "CGRA sidecar (e.g. 4x4) through the shared "
+                         "MappingService before serving")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if args.offload_cgra:
+        offload_report(cfg, args.offload_cgra)
     if args.smoke:
         cfg = cfg.smoke()
     mesh = make_host_mesh()

@@ -1,0 +1,398 @@
+"""Persistent mapping service: topology-keyed solver pool, canonical-DFG
+mapping cache, UNSAT-core II pruning, budget-vs-UNSAT distinction, and the
+bounded learnt-clause database."""
+import copy
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import given, settings, strategies as st
+
+from repro.core import suite
+from repro.core.cgra import CGRA
+from repro.core.cnf import CNF
+from repro.core.dfg import DFG, running_example
+from repro.core.encode import EncoderSession
+from repro.core.mapper import MapperConfig, map_loop
+from repro.core.sat import SAT, UNKNOWN, UNSAT
+from repro.core.sat.cdcl import CDCLSolver
+from repro.core.sat.portfolio import SolverSession
+from repro.core.service import (MappingService, dfg_signature, get_service,
+                                reset_service, shape_signature,
+                                topology_signature)
+from repro.core.simulator import verify_mapping
+
+CFG = MapperConfig(solver="auto", timeout_s=90)
+
+
+# ------------------------------------------------------- request signatures
+def test_signatures_distinguish_topology_and_structure():
+    g1, g2 = suite.get("sha"), suite.get("gsm")
+    assert topology_signature(CGRA(3, 3)) != topology_signature(CGRA(4, 4))
+    assert topology_signature(CGRA(3, 3)) != topology_signature(
+        CGRA(3, 3, topology="torus"))
+    assert shape_signature(g1) != shape_signature(g2)
+    assert dfg_signature(g1) != dfg_signature(g2)
+    # re-built copies of the same kernel are canonically identical
+    assert dfg_signature(g1) == dfg_signature(suite.get("sha"))
+    assert shape_signature(g1) == shape_signature(suite.get("sha"))
+
+
+def test_shape_signature_ignores_ops_and_imms():
+    """The SAT encoding never reads opcodes/immediates, so same-shape DFGs
+    with different arithmetic share one pooled session; the full request
+    signature still tells them apart (the verified result differs)."""
+    def build(op, imm):
+        g = DFG("shape")
+        a = g.add("const", imm=imm)
+        b = g.add("iv")
+        g.add(op, [(a, 0), (b, 0)])
+        return g
+    g_add, g_mul = build("add", 3), build("mul", 7)
+    assert shape_signature(g_add) == shape_signature(g_mul)
+    assert dfg_signature(g_add) != dfg_signature(g_mul)
+
+
+# ------------------------------------------------------------ mapping cache
+def test_cache_hit_determinism():
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    r1 = svc.map(suite.get("sha"), cgra, CFG)
+    r2 = svc.map(suite.get("sha"), cgra, CFG)
+    assert r1.success and r2.success
+    assert r2.service.via == "cache" and r2.service.cache_hit
+    assert r1.service.via == "cold" and not r1.service.cache_hit
+    assert (r1.ii, r1.mii, r1.placement) == (r2.ii, r2.mii, r2.placement)
+    assert [(a.ii, a.status) for a in r1.attempts] == \
+        [(a.ii, a.status) for a in r2.attempts]
+    assert svc.stats.cache_hits == 1 and svc.stats.requests == 2
+
+
+def test_cache_keyed_on_config_and_topology():
+    svc = MappingService()
+    g = suite.get("gsm")
+    svc.map(g, CGRA(3, 3), CFG)
+    r_other_topo = svc.map(suite.get("gsm"), CGRA(4, 4), CFG)
+    assert not r_other_topo.service.cache_hit
+    r_other_cfg = svc.map(suite.get("gsm"), CGRA(3, 3),
+                          MapperConfig(solver="auto", timeout_s=90,
+                                       amo="sequential"))
+    assert not r_other_cfg.service.cache_hit
+    r_same = svc.map(suite.get("gsm"), CGRA(3, 3), CFG)
+    assert r_same.service.cache_hit
+
+
+# ----------------------------------------------------------- session pool
+def test_topology_pool_reuse_across_suite_kernels():
+    """Two suite kernels on one topology: each owns a pooled session; a
+    second round of requests reuses both sessions warm (use_cache=False
+    forces a real solve through the pool)."""
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    first = {name: svc.map(suite.get(name), cgra, CFG)
+             for name in ("sha", "gsm")}
+    assert svc.n_sessions == 2
+    assert all(not r.service.session_reused for r in first.values())
+    second = {name: svc.map(suite.get(name), cgra, CFG, use_cache=False)
+              for name in ("sha", "gsm")}
+    assert svc.n_sessions == 2          # no new sessions created
+    for name, r in second.items():
+        assert r.service.session_reused and r.service.via == "warm"
+        assert r.ii == first[name].ii
+    assert svc.stats.sessions_reused == 2
+
+
+def test_same_shape_requests_share_one_session():
+    svc = MappingService()
+    cgra = CGRA(2, 2)
+
+    def build(op):
+        g = DFG("shape")
+        a = g.add("const", imm=5)
+        b = g.add("iv")
+        c = g.add(op, [(a, 0), (b, 0)])
+        g.add("xor", [(c, 0), (b, 0)])
+        return g
+    r_add = svc.map(build("add"), cgra, CFG)
+    r_sub = svc.map(build("sub"), cgra, CFG)
+    assert not r_sub.service.cache_hit        # different request...
+    assert r_sub.service.session_reused       # ...same pooled formula
+    assert svc.n_sessions == 1
+    assert r_add.ii == r_sub.ii
+    for r, g in ((r_add, build("add")), (r_sub, build("sub"))):
+        chk = verify_mapping(g, cgra, r.placement, r.ii, n_iters=6)
+        assert chk.ok, chk.errors
+
+
+def test_session_pool_is_lru_bounded():
+    svc = MappingService(max_sessions=2)
+    for size in ("2x2", "3x3", "4x4"):
+        r, c = (int(x) for x in size.split("x"))
+        svc.map(suite.get("gsm"), CGRA(r, c), CFG)
+    assert svc.n_sessions == 2
+    assert svc.stats.session_evictions == 1
+
+
+# --------------------------------------------------- UNSAT-core II pruning
+def test_warm_pass_prunes_proven_unsat_iis():
+    """sha on 3x3 proves II=6 UNSAT before mapping at 7: the warm second
+    pass must replay that refutation from the recorded core (via="core",
+    zero solve time) and land on the same II."""
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    r1 = svc.map(suite.get("sha"), cgra, CFG)
+    assert r1.ii is not None and r1.ii > r1.mii   # at least one UNSAT II
+    r2 = svc.map(suite.get("sha"), cgra, CFG, use_cache=False)
+    assert r2.ii == r1.ii
+    pruned = [a for a in r2.attempts if a.via == "core"]
+    assert len(pruned) == r1.ii - r1.mii >= 1
+    assert all(a.status == UNSAT and a.solve_time == 0.0 for a in pruned)
+    assert r2.service.iis_pruned == len(pruned)
+    assert svc.stats.iis_pruned >= 1
+
+
+def test_proven_lower_bound_jumps_refuted_prefix():
+    """After one sweep, the session can *prove* an II lower bound: every
+    II below the found minimum is a recorded core, so the bound equals
+    the minimum (and all_unsat collapses it immediately)."""
+    sess = SolverSession(EncoderSession(suite.get("sha"), CGRA(3, 3)),
+                         method="cdcl")
+    r = map_loop(suite.get("sha"), CGRA(3, 3),
+                 MapperConfig(solver="cdcl", timeout_s=90), session=sess)
+    assert r.success and r.ii > r.mii
+    assert sess.proven_lower_bound(r.mii) == r.ii
+    assert sess.proven_lower_bound(r.ii) == r.ii   # SAT II is not refuted
+
+
+def test_sweep_through_service_prunes_and_agrees():
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    r1 = svc.map(suite.get("sha"), cgra, CFG)
+    r2 = svc.map(suite.get("sha"), cgra, CFG, sweep_width=3,
+                 use_cache=False)
+    assert r2.ii == r1.ii
+    assert any(a.via == "core" for a in r2.attempts)
+
+
+@pytest.mark.parametrize("size", ["2x2", "3x3", "4x4"])
+def test_service_ii_parity_across_suite(size):
+    """For every suite kernel, the service's warm pass returns the same
+    minimal II as a standalone map_loop — core pruning only ever replays
+    proven refutations, it can never change the answer."""
+    rows, cols = (int(x) for x in size.split("x"))
+    cgra = CGRA(rows, cols)
+    svc = MappingService()
+    for name in suite.names():
+        ref = map_loop(suite.get(name), cgra, CFG)
+        svc.map(suite.get(name), cgra, CFG)                   # first pass
+        warm = svc.map(suite.get(name), cgra, CFG, use_cache=False)
+        assert warm.service.session_reused
+        assert warm.ii == ref.ii and warm.success == ref.success, name
+        if warm.success and warm.ii > warm.mii:
+            # every UNSAT II of the first pass is now a recorded core
+            assert warm.service.iis_pruned == warm.ii - warm.mii, name
+
+
+def test_unmappable_dfg_latches_all_unsat():
+    """A memory node with no memory-capable PE gives an empty C1 clause:
+    the very first solve returns an *empty* failed-assumption core, the
+    session latches all_unsat, and the remaining II range is pruned
+    without further solving."""
+    g = DFG("nomem")
+    iv = g.add("iv")
+    g.add("load", [(iv, 0)], imm=0)
+    cgra = CGRA(2, 2, mem_pes=())
+    sess = SolverSession(EncoderSession(g, cgra, "pairwise"),
+                         method="cdcl")
+    st_, _, stats = sess.solve_complete(2)
+    assert st_ == UNSAT and stats.core == []
+    assert sess.all_unsat and sess.is_proven_unsat(99)
+    r = map_loop(g, cgra, MapperConfig(solver="cdcl", timeout_s=30),
+                 session=sess)
+    assert not r.success
+    assert len(r.attempts) == 1 and r.attempts[0].via == "core"
+
+
+# ------------------------------------------- budget-vs-UNSAT distinction
+def _hard_unsat_cnf() -> CNF:
+    """Pigeonhole PHP(7,6): UNSAT, needs thousands of conflicts."""
+    P, H = 7, 6
+    cnf = CNF()
+    var = {(p, h): cnf.new_var() for p in range(P) for h in range(H)}
+    for p in range(P):
+        cnf.add_clause([var[p, h] for h in range(H)])
+    for h in range(H):
+        for p1 in range(P):
+            for p2 in range(p1 + 1, P):
+                cnf.add(-var[p1, h], -var[p2, h])
+    return cnf
+
+
+def test_budget_exhaustion_is_unknown_never_proven_unsat():
+    cnf = _hard_unsat_cnf()
+    s = CDCLSolver(cnf)
+    status, _ = s.solve(max_conflicts=5, assumptions=[1])
+    assert status == UNKNOWN
+    assert s.last_core is None           # no refutation was produced
+    assert s.last_limit == "conflicts"
+    assert s.ok                          # solver still usable
+    status2, _ = s.solve(assumptions=[1])   # full solve: the real verdict
+    assert status2 == UNSAT
+    assert s.last_core is not None and s.last_limit is None
+
+
+def test_stop_is_unknown_never_proven_unsat():
+    s = CDCLSolver(_hard_unsat_cnf())
+    status, _ = s.solve(stop=lambda: True, assumptions=[1])
+    assert status == UNKNOWN
+    assert s.last_core is None and s.last_limit == "stop"
+
+
+def test_session_never_records_core_on_budget_unknown():
+    """Even if the sweep's complete leg gets cancelled mid-II, the session
+    must not mark that II proven-UNSAT."""
+    sess = SolverSession(EncoderSession(running_example(), CGRA(2, 2)),
+                         method="cdcl")
+    st_, _, stats = sess.solve_complete(2, stop=lambda: True)
+    assert st_ == UNKNOWN and stats.core is None
+    assert not sess.is_proven_unsat(2)
+    st2, _, stats2 = sess.solve_complete(2)   # real solve still works
+    assert st2 == UNSAT and stats2.core is not None
+    assert sess.is_proven_unsat(2)
+
+
+# ------------------------------------------------- failed-assumption cores
+def test_core_is_subset_of_assumptions():
+    cnf = CNF()
+    cnf.n_vars = 4
+    cnf.add(1, 2)
+    cnf.add(-2, 3)
+    s = CDCLSolver(cnf)
+    status, _ = s.solve(assumptions=[4, -1, -3])
+    assert status == UNSAT
+    assert set(s.last_core) <= {4, -1, -3}
+    assert 4 not in s.last_core          # x4 is irrelevant to the conflict
+    # the core alone must already be UNSAT on a fresh solver
+    s2 = CDCLSolver(cnf)
+    assert s2.solve(assumptions=list(s.last_core))[0] == UNSAT
+
+
+def test_core_on_globally_unsat_formula_is_empty():
+    cnf = CNF()
+    cnf.n_vars = 1
+    cnf.add(1)
+    cnf.add(-1)
+    s = CDCLSolver(cnf)
+    assert s.solve(assumptions=[1])[0] == UNSAT
+    assert s.last_core == []
+
+
+# --------------------------------------------- learnt-clause DB reduction
+def test_reduce_db_bounds_retention_and_stays_correct():
+    cnf = _hard_unsat_cnf()
+    capped = CDCLSolver(cnf, max_learnt=60)
+    assert capped.solve()[0] == UNSAT
+    assert capped.evicted_total > 0
+    assert capped.learnt_db_size <= 60
+    # same verdict as the unbounded reference
+    assert CDCLSolver(cnf).solve()[0] == UNSAT
+
+
+@st.composite
+def random_cnf(draw):
+    n_vars = draw(st.integers(8, 40))
+    n_clauses = draw(st.integers(2 * n_vars, 5 * n_vars))
+    cnf = CNF()
+    cnf.n_vars = n_vars
+    for _ in range(n_clauses):
+        k = draw(st.integers(2, 3))
+        lits = []
+        for _ in range(k):
+            v = draw(st.integers(1, n_vars))
+            lits.append(v if draw(st.booleans()) else -v)
+        cnf.add_clause(lits)
+    return cnf
+
+
+@settings(max_examples=12, deadline=None)
+@given(random_cnf(), st.integers(10, 80))
+def test_reduce_db_property_matches_unbounded_solver(cnf, cap):
+    """Property: eviction only drops redundant lemmas — the capped solver
+    agrees with the unbounded one on every instance, any model it returns
+    satisfies the formula, and retention respects the cap."""
+    ref_status, _ = CDCLSolver(cnf).solve()
+    s = CDCLSolver(cnf, max_learnt=cap)
+    status, model = s.solve()
+    assert status == ref_status
+    if status == SAT:
+        assert cnf.check(model)
+    assert s.learnt_db_size <= cap
+
+
+def test_session_cap_reaches_backend_and_attempts():
+    cfg = MapperConfig(solver="cdcl", timeout_s=90, max_learnt=64)
+    r = map_loop(suite.get("sha"), CGRA(3, 3), cfg)
+    assert r.success
+    # the cap reached the persistent CDCL: retention stayed bounded even
+    # if this small kernel never actually overflows it
+    sess_cap = 64
+    assert all(a.learned_retained is None or a.learned_retained >= 0
+               for a in r.attempts)
+    s = CDCLSolver(_hard_unsat_cnf(), max_learnt=sess_cap)
+    s.solve()
+    assert s.learnt_db_size <= sess_cap
+
+
+# ----------------------------------------------------- consumer plumbing
+def test_map_loop_service_param_routes_through_service():
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    r1 = map_loop(suite.get("nw"), cgra, CFG, service=svc)
+    r2 = map_loop(suite.get("nw"), cgra, CFG, service=svc)
+    assert r1.service is not None and r2.service.cache_hit
+    assert r1.ii == r2.ii
+    assert svc.stats.requests == 2
+
+
+def test_run_suite_through_service():
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    first = suite.run_suite(cgra, CFG, names_subset=["gsm", "srand"],
+                            service=svc)
+    second = suite.run_suite(cgra, CFG, names_subset=["gsm", "srand"],
+                             service=svc)
+    for name in ("gsm", "srand"):
+        assert second[name].service.cache_hit
+        assert first[name].ii == second[name].ii
+
+
+def test_get_service_is_process_wide_singleton():
+    reset_service()
+    try:
+        a, b = get_service(), get_service()
+        assert a is b
+    finally:
+        reset_service()
+
+
+def test_cached_results_are_isolated_copies():
+    svc = MappingService()
+    r1 = svc.map(suite.get("bitcount"), CGRA(3, 3), CFG)
+    r2 = svc.map(suite.get("bitcount"), CGRA(3, 3), CFG)
+    # shallow copies: mutating the returned wrapper must not corrupt the
+    # cache entry's identity fields
+    r2_ii = r2.ii
+    r2.ii = None
+    r3 = svc.map(suite.get("bitcount"), CGRA(3, 3), CFG)
+    assert r3.ii == r2_ii == r1.ii
+
+
+def test_service_results_deepcopyable():
+    """Results carry RequestStats; they must survive copy.deepcopy (the
+    serving layer snapshots reports)."""
+    svc = MappingService()
+    r = svc.map(suite.get("srand"), CGRA(3, 3), CFG)
+    rc = copy.deepcopy(r)
+    assert rc.ii == r.ii and rc.service.via == r.service.via
