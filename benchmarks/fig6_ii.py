@@ -40,9 +40,12 @@ from typing import Dict, Optional
 
 from repro.core import suite
 from repro.core.baseline import BaselineConfig, map_heuristic
-from repro.core.cgra import CGRA
+from repro.core.cgra import CGRA, cgra_from_name
 from repro.core.mapper import MapperConfig, map_loop
 
+# default Fig. 6 grid; override with --sizes=... using the full fabric
+# grammar (RxC[-mesh|torus|diag|onehop][:rN]) to sweep other fabrics,
+# e.g. --sizes=3x3,3x3-torus,3x3-onehop,4x4:r2
 SIZES = ["2x2", "3x3", "4x4", "5x5"]
 
 
@@ -73,10 +76,12 @@ def amo_clause_report(names=None) -> Dict[str, Dict[str, int]]:
 
 def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
         routing: bool = False, sweep_width: int = 4,
-        amo: str = "pairwise", service: bool = True) -> Dict:
+        amo: str = "pairwise", service: bool = True, sizes=None) -> Dict:
     """``service=False`` skips the three MappingService legs (cold pass +
     timed warm pass + cached call) and their columns — for callers like
-    ``table_time.py`` that only consume the sat/heur timings."""
+    ``table_time.py`` that only consume the sat/heur timings. ``sizes``
+    takes fabric names in the full ``RxC[-topology][:rN]`` grammar, so
+    torus/one-hop/register-count variants benchmark from the CLI."""
     names = names or suite.names()
     _warmup(sweep_width)
     svc = None
@@ -84,9 +89,8 @@ def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
         from repro.core.service import MappingService
         svc = MappingService()
     out: Dict[str, Dict] = {}
-    for size in SIZES:
-        r, c = (int(x) for x in size.split("x"))
-        cgra = CGRA(r, c)
+    for size in (sizes or SIZES):
+        cgra = cgra_from_name(size)
         for name in names:
             g = suite.get(name)
             t0 = time.time()
@@ -238,14 +242,14 @@ def summarize(results: Dict) -> Dict:
 
 
 def main(quick: bool = False, amo: str = "pairwise",
-         check: bool = False) -> None:
+         check: bool = False, sizes=None) -> None:
     names = ["sha", "gsm", "srand", "bitcount", "nw"] if quick else None
     print("AMO clause counts (pairwise vs Sinz sequential, at MII on 4x4):")
     for name, counts in amo_clause_report(names).items():
         print(f"  {name:10s} pairwise={counts['pairwise']:6d} "
               f"sequential={counts['sequential']:6d}")
     res = run(timeout_s=30 if quick else 120, names=names,
-              heuristic_restarts=10 if quick else 30, amo=amo)
+              heuristic_restarts=10 if quick else 30, amo=amo, sizes=sizes)
     print("benchmark/size,mii,sat_ii,cold_ii,sweep_ii,service_ii,heur_ii,"
           "sat_time_s,cold_time_s,sweep_time_s,service_warm_time_s,"
           "heur_time_s,service_pruned,service_cache_hit")
@@ -281,5 +285,9 @@ def main(quick: bool = False, amo: str = "pairwise",
 if __name__ == "__main__":
     import sys
     amo = "sequential" if "--amo=sequential" in sys.argv else "pairwise"
+    sizes = None
+    for a in sys.argv[1:]:
+        if a.startswith("--sizes="):
+            sizes = [s for s in a[len("--sizes="):].split(",") if s]
     main(quick="--quick" in sys.argv, amo=amo,
-         check="--check" in sys.argv)
+         check="--check" in sys.argv, sizes=sizes)

@@ -69,7 +69,7 @@ def _attempt(dfg: DFG, cgra: CGRA, ii: int, rng: random.Random,
 
     def compatible(n: int, p: int, t: int) -> bool:
         node = dfg.nodes[n]
-        if node.is_mem and not cgra.can_mem(p):
+        if not cgra.can_execute(p, node.op):
             return False
         for s, dd in in_edges[n]:
             if s in place:

@@ -1,15 +1,25 @@
-"""CGRA architecture model.
+"""CGRA architecture model (legacy front end).
 
 The target architecture (paper Fig. 1): a 2-D mesh of processing elements
 (PEs). Each PE has a single-cycle ALU, ``n_regs`` local registers, and an
 output register readable by its 4-neighbours in later cycles. Memory lines
 give (by default all) PEs load/store access.
+
+:class:`CGRA` is kept as a thin adapter over the declarative
+:class:`repro.core.arch.ArchSpec`: the homogeneous ``spec`` it constructs
+is the single source of truth for neighbour tables, capability checks, and
+the service-keying ``signature()``, so a ``CGRA(4, 4)`` and an
+``arch("4x4")`` describe — and pool as — the identical fabric. New code
+(and every heterogeneous fabric) should use ``ArchSpec`` /
+:func:`repro.core.arch.arch` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import cached_property
 from typing import FrozenSet, Tuple
+
+from .arch import OP_CLASSES, ArchSpec, parse_fabric
 
 
 @dataclass(frozen=True)
@@ -17,9 +27,24 @@ class CGRA:
     rows: int
     cols: int
     n_regs: int = 4
-    topology: str = "mesh"  # "mesh" (paper) | "torus" | "diag"
+    # "mesh" (paper) | "torus" | "diag" | "onehop" (HyCUBE-style bypass)
+    topology: str = "mesh"
     # PE ids with memory access; None -> all PEs can load/store (paper default)
     mem_pes: Tuple[int, ...] | None = None
+
+    @cached_property
+    def spec(self) -> ArchSpec:
+        """The equivalent homogeneous :class:`ArchSpec` (ground truth for
+        neighbours, capabilities, and the service signature)."""
+        caps = None
+        if self.mem_pes is not None:
+            with_mem = frozenset(OP_CLASSES)
+            without = with_mem - {"mem"}
+            mem = set(self.mem_pes)
+            caps = tuple(with_mem if p in mem else without
+                         for p in range(self.rows * self.cols))
+        return ArchSpec(self.rows, self.cols, self.topology,
+                        pe_caps=caps, pe_regs=self.n_regs)
 
     @property
     def n_pes(self) -> int:
@@ -31,40 +56,46 @@ class CGRA:
     def pe(self, r: int, c: int) -> int:
         return r * self.cols + c
 
-    @cached_property
-    def _neighbors(self) -> Tuple[FrozenSet[int], ...]:
-        out = []
-        for p in range(self.n_pes):
-            r, c = self.coords(p)
-            deltas = [(-1, 0), (1, 0), (0, -1), (0, 1)]
-            if self.topology == "diag":
-                deltas += [(-1, -1), (-1, 1), (1, -1), (1, 1)]
-            acc = set()
-            for dr, dc in deltas:
-                nr, nc = r + dr, c + dc
-                if self.topology == "torus":
-                    acc.add(self.pe(nr % self.rows, nc % self.cols))
-                elif 0 <= nr < self.rows and 0 <= nc < self.cols:
-                    acc.add(self.pe(nr, nc))
-            out.append(frozenset(acc))
-        return tuple(out)
-
     def neighbors(self, p: int) -> FrozenSet[int]:
         """PEs whose output register PE ``p``'s operands can read (excl. self)."""
-        return self._neighbors[p]
+        return self.spec._neighbors[p]
 
     def reachable(self, src: int, dst: int) -> bool:
         """True if a value produced on ``src`` is directly consumable on ``dst``."""
-        return src == dst or dst in self._neighbors[src]
+        return self.spec.reachable(src, dst)
 
     def can_mem(self, p: int) -> bool:
-        return self.mem_pes is None or p in self.mem_pes
+        return self.spec.can_mem(p)
+
+    def can_execute(self, p: int, op: str) -> bool:
+        return self.spec.can_execute(p, op)
+
+    def pes_for(self, op: str) -> Tuple[int, ...]:
+        return self.spec.pes_for(op)
+
+    def pes_for_class(self, cls: str) -> Tuple[int, ...]:
+        return self.spec.pes_for_class(cls)
+
+    def regs(self, p: int) -> int:
+        return self.n_regs
+
+    def signature(self) -> Tuple:
+        return self.spec.signature()
 
     def __str__(self) -> str:  # pragma: no cover
         return f"CGRA({self.rows}x{self.cols}, {self.topology}, {self.n_regs} regs)"
 
 
 def cgra_from_name(name: str, **kw) -> CGRA:
-    """'4x4' -> CGRA(4, 4)."""
-    r, c = name.lower().split("x")
-    return CGRA(int(r), int(c), **kw)
+    """'4x4' -> CGRA(4, 4); the grammar also carries the interconnect and
+    register count: '4x4-torus' -> CGRA(4, 4, topology="torus"),
+    '8x8:r8' -> CGRA(8, 8, n_regs=8), '4x4-onehop:r2' combines both.
+    Explicit keyword arguments win over name suffixes."""
+    rows, cols, interconnect, regs = parse_fabric(name)
+    if interconnect == "custom":
+        raise ValueError("custom adjacency needs repro.core.arch.arch(), "
+                         "not cgra_from_name()")
+    kw.setdefault("topology", interconnect)
+    if regs is not None:
+        kw.setdefault("n_regs", regs)
+    return CGRA(rows, cols, **kw)

@@ -106,12 +106,15 @@ class EncoderSession:
     def __init__(self, dfg: DFG, cgra: CGRA, amo: str = "pairwise"):
         dfg.validate()
         self.dfg = dfg
-        self.cgra = cgra
+        self.cgra = cgra          # a CGRA or a heterogeneous ArchSpec
         self.amo = amo
         self.asap, self.alap, self.length = asap_alap(dfg)
+        # op-class -> PE compatibility: a node's candidate literals range
+        # over exactly the PEs capable of its op class (mem/mul/alu), so
+        # capability constraints are enforced by variable layout + C1
+        # rather than by extra clauses (generalises the old can_mem check)
         self.allowed_pes: Dict[int, List[int]] = {
-            nid: [p for p in range(cgra.n_pes)
-                  if (not node.is_mem) or cgra.can_mem(p)]
+            nid: list(cgra.pes_for(node.op))
             for nid, node in dfg.nodes.items()
         }
         # src PE -> PEs that can consume from it (self + neighbours)

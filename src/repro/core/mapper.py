@@ -51,6 +51,12 @@ class MapperConfig:
     # learnt-clause database cap for the persistent CDCL (None = keep all;
     # the mapping service sets a bound so long-lived sessions stay small)
     max_learnt: Optional[int] = None
+    # sweep-only: race a second cold CDCL per candidate, started from the
+    # *opposite* saved phases of the persistent session leg; whichever leg
+    # delivers first decides the II (IIAttempt.via == "cdcl-flip" when the
+    # flipped racer wins). CDCL sessions only; staged like the WalkSAT
+    # racer so easy windows never pay for it.
+    race_flip: bool = True
 
 
 @dataclass
@@ -64,7 +70,10 @@ class IIAttempt:
     route_nodes: int = 0
     regalloc_ok: Optional[bool] = None
     # incremental-core reuse statistics (None on the cold path)
-    via: str = ""                            # backend that decided this II
+    via: str = ""                            # backend/leg that decided this II
+    #   via == "cdcl-flip": the sweep's second racing solver (cold CDCL
+    #   started from the opposite saved phases) beat the persistent
+    #   session leg to this II's verdict
     #   via == "core": this II was *pruned* — a failed-assumption core
     #   recorded earlier on the same session already refutes it, so the
     #   UNSAT status is replayed without a solve (solve_time == 0)

@@ -1,7 +1,9 @@
 """Register allocation (paper §IV-D).
 
 Post-SAT phase: for every PE, build the interference graph of the values
-produced there and colour it with the PE's ``n_regs`` local registers.
+produced there and colour it with that PE's local registers (per-PE counts
+via ``arch.regs(p)`` — heterogeneous fabrics give different PEs different
+register files).
 Lifetimes are *cyclic* intervals on the II-cycle kernel circle; the C3
 timing window guarantees every lifetime is <= II, so a value never
 interferes with its own next-iteration instance.
@@ -12,7 +14,8 @@ producer PE, the value lives only in the PE output register and needs no
 local register. The allocator models both modes and prefers bypass —
 resolving the Eq. 4 / Eq. 5 disjunction that the SAT phase leaves open.
 
-Failure (any PE needs > n_regs colours) sends the Fig. 3 loop to II+1.
+Failure (any PE needs more colours than its register count) sends the
+Fig. 3 loop to II+1.
 """
 from __future__ import annotations
 
@@ -86,7 +89,7 @@ def allocate(dfg: DFG, cgra: CGRA,
         colours = _greedy_colour(ns, adj)
         pressure = max(colours.values(), default=-1) + 1
         res.max_pressure = max(res.max_pressure, pressure)
-        if pressure > cgra.n_regs:
+        if pressure > cgra.regs(p):
             return RegAllocResult(ok=False, max_pressure=pressure,
                                   failed_pe=p)
         res.regs.update(colours)

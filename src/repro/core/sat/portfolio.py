@@ -389,6 +389,7 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                  accept: Optional[Callable[[int, List[bool]], bool]] = None,
                  session: Optional[SolverSession] = None,
                  iis: Optional[List[int]] = None,
+                 race_flip: bool = True, flip_delay: float = 0.25,
                  ) -> List[WindowResult]:
     """Solve a window of K CNFs (candidate IIs, ascending) concurrently.
 
@@ -412,6 +413,16 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
     conflicts in parallel cold solvers. ``cnfs`` must then be the session's
     per-II projections (``session.project(ii)``, ascending II order): the
     racer walks those, warm-started from the session's best assignment.
+
+    ``race_flip`` (CDCL sessions only) additionally races a *second*
+    complete solver per candidate: a cold CDCL on the projection, started
+    from the opposite saved phases (all-True vs the persistent solver's
+    all-False default), staged behind ``flip_delay`` like the WalkSAT
+    racer. Whichever leg delivers first decides the candidate — the
+    winner is reported in the result's ``via`` ("cdcl" = session leg,
+    "cdcl-flip" = the flipped racer). A flip-leg UNSAT is a proof on
+    base + that II's layer, so it is recorded in the session's
+    proven-UNSAT registry exactly like a failed-assumption core.
     """
     from . import SAT, UNKNOWN, resolve_method, solve as solve_any
 
@@ -439,13 +450,14 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
             accepted = False
             if status == SAT and accept is not None:
                 accepted = accept(i, model)
-                if not accepted and via == "walksat" and complete:
-                    # provisional: an incomplete-leg model that fails the
+                if not accepted and via in ("walksat", "cdcl-flip") \
+                        and complete:
+                    # provisional: a racer-leg model that fails the
                     # caller's acceptance (e.g. regalloc) must not decide
-                    # this candidate — the complete backend may yet produce
-                    # a model that passes, which is exactly what the
-                    # sequential reference would have judged. Leave the
-                    # candidate open for the complete leg.
+                    # this candidate — the session's own solver may yet
+                    # produce a model that passes, which is exactly what
+                    # the sequential reference would have judged. Leave
+                    # the candidate open for the session leg.
                     return
             results[i] = WindowResult(status, model, via, time.time() - t0,
                                       stats)
@@ -600,8 +612,6 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
         solver, lowest II first. Sequential by design — candidate i's
         learned clauses are exactly what makes candidate i+1 cheap, which
         replaces the cold path's process-parallel independent proofs."""
-        assert iis is not None and len(iis) == K, \
-            "session window solving needs the candidate IIs"
         for i in range(K):
             if past_deadline():
                 break
@@ -614,8 +624,49 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                 continue   # cancelled / timed out; filled in at the end
             deliver(i, status, model, method, st)
 
+    def run_flip_leg() -> None:
+        """The second racing complete leg (ROADMAP PR 2 follow-up): a cold
+        CDCL per candidate on the session's projection, started from the
+        *opposite* saved phases — all-True where the persistent solver
+        defaults to all-False — so the two legs walk complementary search
+        trajectories over the same instances. Staged behind ``flip_delay``
+        (easy windows the session leg resolves first never pay), lowest II
+        first, skipping candidates already decided. An UNSAT here refutes
+        base + that II's layer outright, so it feeds the session's
+        proven-UNSAT registry like a failed-assumption core (core =
+        [layer selector], never the empty all-UNSAT latch)."""
+        if closed.wait(min(flip_delay,
+                           max(0.0, (deadline or 1e18) - time.time()))):
+            return
+        from . import SAT as _SAT, UNSAT as _UNSAT
+        from .cdcl import CDCLSolver
+        for i in range(K):
+            if stops[i].is_set() or past_deadline():
+                continue
+            solver = CDCLSolver(cnfs[i])
+            status, model = solver.solve(
+                phase_hint=[True] * cnfs[i].n_vars,
+                stop=lambda: stops[i].is_set() or past_deadline())
+            if status not in (_SAT, _UNSAT):
+                continue
+            st = SolveStats(via="cdcl-flip",
+                            conflicts=solver.last_conflicts)
+            if status == _UNSAT:
+                inc = session.enc.inc
+                if inc.has_layer(iis[i]):
+                    st.core = [inc.selector(iis[i])]
+                    session.note_core(iis[i], st.core)
+            deliver(i, status, model, "cdcl-flip", st)
+
+    flip_thread: Optional[threading.Thread] = None
     if complete and session is not None:
+        assert iis is not None and len(iis) == K, \
+            "session window solving needs the candidate IIs"
         _start_racer()
+        if race_flip and method == "cdcl" and K:
+            flip_thread = threading.Thread(target=run_flip_leg,
+                                           daemon=False)
+            flip_thread.start()
         run_session_leg()
     elif complete:
         futs = submit_procs() if method == "cdcl" else None
@@ -657,6 +708,11 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                 results[i] = WindowResult(
                     CANCELLED if via == "cancel" else UNKNOWN,
                     None, via, time.time() - t0)
+    if flip_thread is not None:
+        # the flip racer polls its stop event every few hundred CDCL
+        # ticks, so this join is short; joining keeps flip threads from
+        # piling up across consecutive windows of one sweep
+        flip_thread.join(timeout=10.0)
     return results   # type: ignore[return-value]
 
 

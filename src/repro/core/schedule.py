@@ -13,6 +13,7 @@ from typing import Dict, List, Tuple
 
 import networkx as nx
 
+from .arch import op_class
 from .cgra import CGRA
 from .dfg import DFG
 
@@ -37,11 +38,20 @@ def asap_alap(dfg: DFG) -> Tuple[Dict[int, int], Dict[int, int], int]:
 
 
 def res_mii(dfg: DFG, cgra: CGRA) -> int:
+    """Per-resource-class ResMII: beyond the paper's node-count bound, each
+    op class (alu / mem / mul — see ``repro.core.arch.op_class``) is
+    bottlenecked by the PEs that support it, so a heterogeneous fabric's
+    lower bound is max over classes of ceil(#ops / #capable PEs). On the
+    paper's homogeneous CGRA this reduces exactly to the old
+    node-count + memory-line bound."""
     mii = math.ceil(dfg.n / cgra.n_pes)
-    n_mem = sum(1 for nd in dfg.nodes.values() if nd.is_mem)
-    n_mem_pes = cgra.n_pes if cgra.mem_pes is None else len(cgra.mem_pes)
-    if n_mem:
-        mii = max(mii, math.ceil(n_mem / max(n_mem_pes, 1)))
+    counts: Dict[str, int] = {}
+    for nd in dfg.nodes.values():
+        cls = op_class(nd.op)
+        counts[cls] = counts.get(cls, 0) + 1
+    for cls, cnt in counts.items():
+        supporters = len(cgra.pes_for_class(cls))
+        mii = max(mii, math.ceil(cnt / max(supporters, 1)))
     return max(mii, 1)
 
 

@@ -52,27 +52,40 @@ from .sat.portfolio import SolverSession
 # ----------------------------------------------------------------- keys
 
 
-def topology_signature(cgra: CGRA) -> Tuple:
-    """Everything the encoding reads off the CGRA: geometry, inter-PE
-    reachability (topology) and memory capability. ``n_regs`` is included
-    because register allocation — part of the Fig. 3 accept criterion —
-    depends on it."""
-    return (cgra.rows, cgra.cols, cgra.topology, cgra.n_regs, cgra.mem_pes)
+def topology_signature(cgra) -> Tuple:
+    """Everything the encoding, register allocator, and simulator read off
+    the fabric: geometry, inter-PE reachability, per-PE capability sets,
+    and per-PE register counts. Both the legacy :class:`CGRA` adapter and
+    the declarative :class:`repro.core.arch.ArchSpec` expose it as
+    ``signature()`` — equivalent homogeneous fabrics share one signature
+    (and therefore one pooled session) regardless of front-end class."""
+    return cgra.signature()
 
 
-def shape_signature(dfg: DFG) -> Tuple:
+def shape_signature(dfg: DFG, arch=None) -> Tuple:
     """The DFG *shape class*: exactly what the SAT encoding depends on.
 
-    The clause families (C1/C2/C3) read node count, per-node memory
-    capability (allowed-PE sets), and the edge/distance structure
-    (ASAP/ALAP windows and MII derive from these) — never the opcodes or
-    immediates. Two DFGs with equal shape signatures therefore produce
-    *identical* CNFs under one variable numbering, so they can share a
-    pooled ``SolverSession`` (learnt clauses, phases, warm starts, and
-    proven-UNSAT cores all transfer soundly)."""
-    nodes = tuple(
-        (nid, dfg.nodes[nid].is_mem, len(dfg.nodes[nid].ins))
-        for nid in sorted(dfg.nodes))
+    The clause families (C1/C2/C3) read node count, per-node allowed-PE
+    sets, and the edge/distance structure (ASAP/ALAP windows and MII
+    derive from these) — never the opcodes or immediates themselves. Two
+    DFGs with equal shape signatures therefore produce *identical* CNFs
+    under one variable numbering, so they can share a pooled
+    ``SolverSession`` (learnt clauses, phases, warm starts, and
+    proven-UNSAT cores all transfer soundly).
+
+    With ``arch`` the per-node component is the node's actual allowed-PE
+    tuple on that fabric (op-class capability aware — on a heterogeneous
+    fabric an ``add``-shaped and a ``mul``-shaped DFG must *not* share a
+    session); without it, the homogeneous-fabric abstraction (memory ops
+    are the only capability split) is used."""
+    if arch is None:
+        nodes = tuple(
+            (nid, dfg.nodes[nid].is_mem, len(dfg.nodes[nid].ins))
+            for nid in sorted(dfg.nodes))
+    else:
+        nodes = tuple(
+            (nid, arch.pes_for(dfg.nodes[nid].op), len(dfg.nodes[nid].ins))
+            for nid in sorted(dfg.nodes))
     edges = tuple(sorted(dfg.edges()))
     return (len(dfg.nodes), nodes, edges)
 
@@ -162,7 +175,7 @@ class MappingService:
         pooled session's cap."""
         cap = cfg.max_learnt if cfg.max_learnt is not None \
             else self.max_learnt
-        key = (topology_signature(cgra), shape_signature(dfg),
+        key = (topology_signature(cgra), shape_signature(dfg, cgra),
                cfg.amo, cfg.solver, cfg.seed, cap)
         with self._lock:
             entry = self._pool.get(key)

@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from .arch import op_class
 from .cgra import CGRA
 from .dfg import DFG
 
@@ -61,8 +62,9 @@ def static_check(dfg: DFG, cgra: CGRA, placement: Dict[int, Tuple[int, int, int]
             errs.append(f"node {n}: bad PE {p}")
         if not (0 <= c < ii):
             errs.append(f"node {n}: kernel cycle {c} outside [0,{ii})")
-        if dfg.nodes[n].is_mem and not cgra.can_mem(p):
-            errs.append(f"mem node {n} on non-mem PE {p}")
+        if not cgra.can_execute(p, dfg.nodes[n].op):
+            errs.append(f"{op_class(dfg.nodes[n].op)} node {n} "
+                        f"({dfg.nodes[n].op}) on incapable PE {p}")
         key = (p, c)
         if key in slots:
             errs.append(f"PE/cycle clash: nodes {slots[key]} and {n} at {key}")

@@ -51,13 +51,20 @@ def run_suite(cgra, cfg=None, sweep_width: int = 1,
     ``run_suite`` pass through the same service starts warm (cache hits,
     reused sessions, core-pruned IIs). ``None`` preserves the standalone
     per-kernel behaviour.
+
+    This is now a thin batch shim over the unified front door: each kernel
+    becomes one ``MapRequest`` served by ``repro.core.api.compile`` (which
+    also accepts fabric *names* and heterogeneous ``ArchSpec``s for
+    ``cgra``).
     """
-    from .mapper import MapperConfig, map_loop
+    from .api import MapRequest, compile as compile_request
+    from .mapper import MapperConfig
     cfg = cfg or MapperConfig()
     out: Dict[str, object] = {}
     for name in (names_subset or names()):
-        out[name] = map_loop(get(name), cgra, cfg, sweep_width=sweep_width,
-                             service=service)
+        out[name] = compile_request(MapRequest(
+            dfg=get(name), arch=cgra, config=cfg, sweep_width=sweep_width,
+            service=service))
     return out
 
 

@@ -166,7 +166,8 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
 
         wres = solve_window(
             cnfs, method=cfg.solver, seed=cfg.seed,
-            deadline=deadline, accept=accept, session=sess, iis=iis)
+            deadline=deadline, accept=accept, session=sess, iis=iis,
+            race_flip=cfg.race_flip)
 
         winner: Optional[int] = None
         blocked = False   # an unresolved candidate below the best SAT

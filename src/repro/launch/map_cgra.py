@@ -7,6 +7,15 @@ accumulation, RoPE rotation, router argmax, SSD recurrence — the loops a
 CGRA sidecar could offload), maps each with SAT-MapIt, and prints II +
 verification per loop. Matmul-shaped compute is intentionally absent: it
 is not a modulo-scheduling target (it goes to the MXU / systolic array).
+
+``--cgra`` takes the full fabric grammar (``RxC[-topology][:rN]``, e.g.
+``4x4-torus``, ``8x8:r8``, ``4x4-onehop``), and ``--mem`` / ``--mul``
+restrict those op classes to a region (``col0``, ``row1``, ``corners``,
+``border``, ``even``/``odd``) — so heterogeneous fabrics sweep from the
+CLI. ``--check`` turns the report into a CI smoke: exit non-zero unless
+every loop maps *and* every node landed on a capability-compatible PE.
+Every mapping is served through the unified ``compile(MapRequest(...))``
+front door (``repro.core.api``).
 """
 from __future__ import annotations
 
@@ -15,9 +24,10 @@ import argparse
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..core.cgra import cgra_from_name
+from ..core.api import MapRequest, compile as compile_request
+from ..core.arch import arch
+from ..core.mapper import MapperConfig
 from ..core.frontend import trace_loop_body
-from ..core.mapper import MapperConfig, map_loop
 
 
 def _norm_acc(i, acc, x):
@@ -63,7 +73,19 @@ def _amo_clause_counts(g, cgra, mii: int) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--cgra", default="4x4")
+    ap.add_argument("--cgra", default="4x4", metavar="FABRIC",
+                    help="fabric name RxC[-mesh|torus|diag|onehop][:rN] "
+                         "(e.g. 4x4, 4x4-torus, 8x8:r8)")
+    ap.add_argument("--mem", default=None, metavar="REGION",
+                    help="restrict load/store-capable PEs to a region "
+                         "(colK/rowK/corners/border/even/odd/none)")
+    ap.add_argument("--mul", default=None, metavar="REGION",
+                    help="restrict mul/div/rem-capable PEs to a region")
+    ap.add_argument("--regs", type=int, default=None,
+                    help="local registers per PE (overrides the :rN suffix)")
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: exit non-zero unless every loop maps "
+                         "and every node sits on a capability-compatible PE")
     ap.add_argument("--routing", action="store_true")
     ap.add_argument("--amo", choices=["pairwise", "sequential"],
                     default="pairwise",
@@ -88,7 +110,7 @@ def main() -> None:
                          "width K and report both modes side-by-side")
     args = ap.parse_args()
     cfg = get_config(args.arch)
-    cgra = cgra_from_name(args.cgra)
+    cgra = arch(args.cgra, regs=args.regs, mem=args.mem, mul=args.mul)
     mode = "cold" if args.cold else "incremental"
     service = None
     if args.service:
@@ -97,11 +119,23 @@ def main() -> None:
         mode += "+service"
     print(f"CGRA offload report: {cfg.name} on {cgra} "
           f"[amo={args.amo}, {mode}]")
+    failures = []
     for name, fn, n_carry, loads in loops_for(cfg):
         g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
-        r = map_loop(g, cgra, MapperConfig(
-            solver="auto", timeout_s=60, routing=args.routing, amo=args.amo,
-            incremental=not args.cold), service=service)
+        r = compile_request(MapRequest(
+            dfg=g, arch=cgra, config=MapperConfig(
+                solver="auto", timeout_s=60, routing=args.routing,
+                amo=args.amo, incremental=not args.cold),
+            service=service))
+        if args.check:
+            if not r.success:
+                failures.append(f"{name}: NO MAPPING on {cgra}")
+            else:
+                for n, (p, _c, _it) in r.placement.items():
+                    op = r.dfg.nodes[n].op
+                    if not cgra.can_execute(p, op):
+                        failures.append(
+                            f"{name}: {op} node {n} on incapable PE {p}")
         status = f"II={r.ii} (MII={r.mii})" if r.success else "NO MAPPING"
         line = (f"  {name:16s} nodes={g.n:2d}  {status}  "
                 f"[seq {r.total_time:.2f}s, {len(r.attempts)} attempts]")
@@ -112,9 +146,10 @@ def main() -> None:
         if args.sweep > 1:
             g2, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
                                     name=name)
-            rs = map_loop(g2, cgra, MapperConfig(
-                solver="auto", timeout_s=60, amo=args.amo,
-                incremental=not args.cold), sweep_width=args.sweep)
+            rs = compile_request(MapRequest(
+                dfg=g2, arch=cgra, config=MapperConfig(
+                    solver="auto", timeout_s=60, amo=args.amo,
+                    incremental=not args.cold), sweep_width=args.sweep))
             sstat = f"II={rs.ii}" if rs.success else "NO MAPPING"
             line += f"  | sweep(k={args.sweep}) {sstat} [{rs.total_time:.2f}s]"
             if rs.success and r.success and rs.ii != r.ii:
@@ -143,13 +178,20 @@ def main() -> None:
         for name, fn, n_carry, loads in loops_for(cfg):
             g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
                                    name=name)
-            r = map_loop(g, cgra, MapperConfig(
-                solver="auto", timeout_s=60, routing=args.routing,
-                amo=args.amo, incremental=not args.cold), service=service)
+            r = compile_request(MapRequest(
+                dfg=g, arch=cgra, config=MapperConfig(
+                    solver="auto", timeout_s=60, routing=args.routing,
+                    amo=args.amo, incremental=not args.cold),
+                service=service))
             print(f"  warm {name:16s} II={r.ii} via={r.service.via} "
                   f"[{r.service.request_time*1e3:.1f}ms]")
         print(f"  warm pass total {_time.time()-t0:.2f}s; "
               f"service: {service.describe()}")
+    if args.check:
+        if failures:
+            raise SystemExit("map_cgra --check failed: " +
+                             "; ".join(failures))
+        print("map_cgra --check OK")
 
 
 if __name__ == "__main__":

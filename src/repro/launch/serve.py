@@ -27,25 +27,27 @@ from .mesh import make_host_mesh
 
 
 def offload_report(cfg, cgra_name: str) -> None:
-    """Map the arch's offloadable inner loops via the shared service."""
-    from ..core.cgra import cgra_from_name
+    """Map the arch's offloadable inner loops via the shared service —
+    one ``compile(MapRequest(...))`` per loop, ``service="default"``
+    resolving to the same process-wide pool every driver shares. The
+    fabric name takes the full grammar (``4x4``, ``4x4-torus:r8``, ...)."""
+    from ..core.api import MapRequest, compile as compile_request
+    from ..core.arch import arch
     from ..core.frontend import trace_loop_body
-    from ..core.mapper import MapperConfig, map_loop
     from ..core.service import get_service
     from .map_cgra import loops_for
 
-    service = get_service()
-    cgra = cgra_from_name(cgra_name)
-    print(f"CGRA offload ({cgra}) via MappingService:")
+    fabric = arch(cgra_name)
+    print(f"CGRA offload ({fabric}) via MappingService:")
     for name, fn, n_carry, loads in loops_for(cfg):
         g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
-        r = map_loop(g, cgra, MapperConfig(solver="auto", timeout_s=60),
-                     service=service)
+        r = compile_request(MapRequest(dfg=g, arch=fabric, timeout_s=60,
+                                       service="default"))
         status = f"II={r.ii}" if r.success else "NO MAPPING"
         print(f"  {name:16s} {status} via={r.service.via} "
               f"pruned={r.service.iis_pruned} "
               f"[{r.service.request_time*1e3:.1f}ms]")
-    print(f"  service: {service.describe()}")
+    print(f"  service: {get_service().describe()}")
 
 
 def main() -> None:

@@ -1,0 +1,420 @@
+"""Declarative ArchSpec + unified compile() front door.
+
+Covers: the fabric-name/region grammar, the degenerate-torus neighbour
+regression, bit-identical CNF between the legacy CGRA path and a
+homogeneous ArchSpec, compile()-vs-legacy II parity across the whole
+suite x {2x2, 3x3, 4x4}, heterogeneous fabrics end-to-end (encode -> SAT
+-> regalloc -> simulator verification) with service keying on the new
+signatures, per-resource-class ResMII, per-PE register allocation, and
+the sweep's opposite-phase racing CDCL leg.
+"""
+import pytest
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import HealthCheck, given, settings, strategies as st
+
+from repro.core import suite
+from repro.core.api import MapRequest, compile as compile_request
+from repro.core.arch import ArchSpec, arch, op_class, parse_fabric, region
+from repro.core.cgra import CGRA, cgra_from_name
+from repro.core.dfg import DFG, running_example
+from repro.core.encode import EncoderSession
+from repro.core.mapper import MapperConfig, map_loop
+from repro.core.regalloc import allocate
+from repro.core.schedule import min_ii, res_mii
+from repro.core.service import (MappingService, shape_signature,
+                                topology_signature)
+from repro.core.simulator import static_check
+
+
+# ------------------------------------------------------------ name grammar
+def test_parse_fabric_grammar():
+    assert parse_fabric("4x4") == (4, 4, "mesh", None)
+    assert parse_fabric("4x4-torus") == (4, 4, "torus", None)
+    assert parse_fabric("8x8:r8") == (8, 8, "mesh", 8)
+    assert parse_fabric("4x4-one-hop:r2") == (4, 4, "onehop", 2)
+    assert parse_fabric("2x3-diag") == (2, 3, "diag", None)
+    for bad in ("4y4", "4x4-ring", "4x4:8r", "4x4:r", "x4"):
+        with pytest.raises(ValueError):
+            parse_fabric(bad)
+
+
+def test_cgra_from_name_suffixes():
+    c = cgra_from_name("4x4-torus:r8")
+    assert (c.rows, c.cols, c.topology, c.n_regs) == (4, 4, "torus", 8)
+    assert cgra_from_name("8x8:r8").n_regs == 8
+    assert cgra_from_name("3x3") == CGRA(3, 3)   # legacy shape unchanged
+    # explicit kwargs win over name suffixes
+    assert cgra_from_name("4x4-torus", topology="mesh").topology == "mesh"
+    with pytest.raises(ValueError):
+        cgra_from_name("4x4-custom")
+
+
+def test_region_grammar():
+    assert region(None, 2, 2) == frozenset(range(4))
+    assert region("all", 2, 3) == frozenset(range(6))
+    assert region("none", 2, 2) == frozenset()
+    assert region("col0", 2, 3) == frozenset({0, 3})
+    assert region("col-1", 2, 3) == frozenset({2, 5})
+    assert region("row1", 2, 3) == frozenset({3, 4, 5})
+    assert region("corners", 3, 3) == frozenset({0, 2, 6, 8})
+    assert region("border", 3, 3) == frozenset(range(9)) - {4}
+    assert region("even", 2, 2) == frozenset({0, 3})
+    assert region("odd", 2, 2) == frozenset({1, 2})
+    assert region([1, 3], 2, 2) == frozenset({1, 3})
+    for bad in ("colx", "middle", [9]):
+        with pytest.raises(ValueError):
+            region(bad, 2, 2)
+
+
+def test_arch_builder_caps_and_regs():
+    a = arch("4x4-torus", regs=8, mem="col0", mul="corners")
+    assert a.interconnect == "torus" and a.pe_regs == (8,) * 16
+    assert a.pes_for("load") == (0, 4, 8, 12)
+    assert a.pes_for("mul") == (0, 3, 12, 15)
+    assert a.pes_for("add") == tuple(range(16))   # alu stays everywhere
+    assert a.can_execute(0, "store") and not a.can_execute(1, "load")
+    assert op_class("div") == "mul" and op_class("select") == "alu"
+    # :rN suffix is the default, explicit regs= wins
+    assert arch("8x8:r8").pe_regs[0] == 8
+    assert arch("8x8:r8", regs=2).pe_regs[0] == 2
+    # per-PE register vectors
+    het = arch("2x2", regs=[4, 4, 0, 0])
+    assert het.regs(0) == 4 and het.regs(3) == 0
+
+
+def test_archspec_validation_errors():
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, "ring")
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, pe_caps=(frozenset({"alu"}),) * 3)   # wrong length
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, pe_caps=(frozenset({"fpu"}),) * 4)   # unknown class
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, pe_regs=(1, 2, 3))
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, "custom")                            # needs adjacency
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, adjacency=((1,), (0,), (3,), (2,)))  # needs custom
+
+
+# ----------------------------------------------- degenerate torus regression
+@pytest.mark.parametrize("rows,cols", [(1, 1), (1, 2), (1, 4), (4, 1), (2, 2)])
+def test_torus_neighbors_exclude_self_on_degenerate_grids(rows, cols):
+    """A 1-row/1-column torus wraps a PE's +-1 (and 2-wide +-1) deltas back
+    onto itself; neighbours must still honour the 'excl. self' contract."""
+    for fabric in (CGRA(rows, cols, topology="torus"),
+                   arch(f"{rows}x{cols}-torus")):
+        for p in range(fabric.n_pes):
+            ns = fabric.neighbors(p)
+            assert p not in ns, f"{rows}x{cols} torus: PE {p} neighbours itself"
+            for q in ns:   # physical links are symmetric on every torus
+                assert p in fabric.neighbors(q)
+    t = CGRA(1, 4, topology="torus")
+    assert [sorted(t.neighbors(p)) for p in range(4)] == \
+        [[1, 3], [0, 2], [1, 3], [0, 2]]
+    assert CGRA(1, 1, topology="torus").neighbors(0) == frozenset()
+    assert sorted(CGRA(1, 2, topology="torus").neighbors(0)) == [1]
+
+
+def test_degenerate_torus_still_maps():
+    g = suite.get("srand")
+    r = map_loop(g, CGRA(1, 8, topology="torus"),
+                 MapperConfig(solver="auto", timeout_s=60))
+    assert r.success   # verify_mapping inside map_loop guards correctness
+
+
+# -------------------------------------------------------------- interconnects
+def test_onehop_neighbors():
+    a = arch("4x4-onehop")
+    # centre PE (1,1)=5: mesh links + straight two-hop bypasses
+    assert sorted(a.neighbors(5)) == [1, 4, 6, 7, 9, 13]
+    # corner PE 0: (0,1),(1,0) mesh + (0,2),(2,0) bypass; no diagonals
+    assert sorted(a.neighbors(0)) == [1, 2, 4, 8]
+    mesh = arch("4x4")
+    for p in range(16):   # one-hop strictly extends the mesh
+        assert mesh.neighbors(p) < a.neighbors(p)
+
+
+def test_custom_adjacency_spec_maps():
+    # 4-PE ring with bidirectional links: equivalent to a 1x4 torus
+    ring = arch("1x4", adjacency=[[1, 3], [0, 2], [1, 3], [0, 2]])
+    assert ring.interconnect == "custom"
+    assert [sorted(ring.neighbors(p)) for p in range(4)] == \
+        [[1, 3], [0, 2], [1, 3], [0, 2]]
+    torus = CGRA(1, 4, topology="torus")
+    g = suite.get("bitcount")
+    rr = map_loop(g, ring, MapperConfig(solver="auto", timeout_s=60))
+    rt = map_loop(suite.get("bitcount"), torus,
+                  MapperConfig(solver="auto", timeout_s=60))
+    assert rr.success and rt.success and rr.ii == rt.ii
+
+
+# ------------------------------------------------------- signatures / keying
+def test_cgra_and_homogeneous_archspec_share_signature():
+    assert CGRA(3, 3).signature() == arch("3x3").signature()
+    assert CGRA(3, 3, n_regs=8, topology="torus").signature() == \
+        arch("3x3-torus:r8").signature()
+    assert CGRA(3, 3, mem_pes=(0, 1)).signature() == \
+        arch("3x3", mem=[0, 1]).signature()
+    assert topology_signature(arch("3x3")) != \
+        topology_signature(arch("3x3-onehop"))
+    assert topology_signature(arch("3x3")) != \
+        topology_signature(arch("3x3", mul="col0"))
+    assert topology_signature(arch("3x3")) != \
+        topology_signature(arch("3x3", regs=[1] + [4] * 8))
+
+
+def test_shape_signature_is_capability_aware_with_arch():
+    def build(op):
+        g = DFG("shape")
+        a = g.add("const", imm=1)
+        b = g.add("iv")
+        g.add(op, [(a, 0), (b, 0)])
+        return g
+    g_add, g_mul = build("add"), build("mul")
+    # homogeneous (legacy one-arg form): add/mul share a shape class
+    assert shape_signature(g_add) == shape_signature(g_mul)
+    hom = arch("3x3")
+    assert shape_signature(g_add, hom) == shape_signature(g_mul, hom)
+    # mul-restricted fabric: allowed-PE sets differ -> must not share
+    het = arch("3x3", mul="corners")
+    assert shape_signature(g_add, het) != shape_signature(g_mul, het)
+
+
+# --------------------------------------------- CNF parity with the CGRA path
+def _clause_multiset(cnf):
+    return sorted(tuple(sorted(c)) for c in cnf.clauses)
+
+
+_OPS = ["add", "mul", "xor", "min", "load", "store"]
+
+
+@st.composite
+def _random_dfg(draw):
+    n = draw(st.integers(4, 10))
+    g = DFG("rand")
+    g.add("iv")
+    g.add("const", imm=draw(st.integers(1, 50)))
+    for i in range(2, n):
+        op = draw(st.sampled_from(_OPS))
+        a = draw(st.integers(0, i - 1))
+        b = draw(st.integers(0, i - 1))
+        g.add(op, [(a, 0), (b, 0)], imm=draw(st.integers(0, 100)))
+    g.validate()
+    return g
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(_random_dfg(), st.sampled_from([(2, 2), (3, 3), (4, 4)]),
+       st.sampled_from(["pairwise", "sequential"]))
+def test_homogeneous_archspec_cnf_bit_identical(g, size, amo):
+    """A homogeneous ArchSpec must encode to the *same clause multiset*
+    (and stats) as the legacy CGRA front end on 2x2/3x3/4x4 — the adapter
+    refactor may not perturb a single literal."""
+    rows, cols = size
+    legacy, spec = CGRA(rows, cols), arch(f"{rows}x{cols}")
+    ii = min_ii(g, legacy)
+    assert ii == min_ii(g, spec)
+    for ii_ in (ii, ii + 1):
+        a = EncoderSession(g, legacy, amo).encode(ii_)
+        b = EncoderSession(g, spec, amo).encode(ii_)
+        assert a.stats == b.stats
+        assert _clause_multiset(a.cnf) == _clause_multiset(b.cnf)
+
+
+def test_mem_restricted_cnf_parity_with_legacy_mem_pes():
+    g = suite.get("sha")
+    legacy = CGRA(3, 3, mem_pes=(0, 1, 2))
+    spec = arch("3x3", mem="row0")
+    ii = min_ii(g, legacy)
+    a = EncoderSession(g, legacy).encode(ii)
+    b = EncoderSession(g, spec).encode(ii)
+    assert a.stats == b.stats
+    assert _clause_multiset(a.cnf) == _clause_multiset(b.cnf)
+
+
+# ------------------------------------------- compile() parity with legacy API
+_PARITY_SIZES = ["2x2", "3x3", "4x4"]
+_PARITY_SVC = MappingService()
+
+
+@pytest.mark.parametrize("name", suite.names())
+def test_compile_reproduces_legacy_iis_across_suite(name):
+    """compile(MapRequest(...)) — fabric given as a *name*, solved through
+    the service pool — must reproduce the legacy map_loop/map_sweep IIs on
+    every suite kernel x {2x2, 3x3, 4x4} (33 cells in all), and repeated
+    requests must come back from the mapping cache."""
+    for size in _PARITY_SIZES:
+        g = suite.get(name)
+        cgra = cgra_from_name(size)
+        cfg = MapperConfig(solver="auto", timeout_s=60,
+                           max_ii=min_ii(g, cgra) + 4)
+        legacy = map_loop(g, cgra, cfg)
+        served = compile_request(MapRequest(
+            dfg=suite.get(name), arch=size, config=cfg,
+            service=_PARITY_SVC))
+        assert served.success == legacy.success, (name, size)
+        assert served.ii == legacy.ii, (name, size)
+        assert served.mii == legacy.mii, (name, size)
+        swept = compile_request(MapRequest(
+            dfg=suite.get(name), arch=size, config=cfg, sweep_width=3))
+        assert swept.success == legacy.success, (name, size)
+        assert swept.ii == legacy.ii, (name, size)
+        cached = compile_request(MapRequest(
+            dfg=suite.get(name), arch=size, config=cfg,
+            service=_PARITY_SVC))
+        assert cached.service.via == "cache" and cached.ii == legacy.ii
+
+
+def test_compile_shorthand_and_request_exclusive():
+    r = compile_request(running_example(), arch="2x2", timeout_s=60)
+    assert r.success and r.ii == 3
+    with pytest.raises(TypeError):
+        compile_request(MapRequest(dfg=running_example()), arch="2x2")
+
+
+def test_compile_routing_override_keeps_sequential_semantics():
+    g = suite.get("gsm")
+    base = compile_request(g, arch="4x4", timeout_s=90)
+    routed = compile_request(suite.get("gsm"), arch="4x4", timeout_s=120,
+                             routing=True)
+    assert routed.success and routed.ii <= base.ii
+
+
+# ------------------------------------------------- heterogeneous end-to-end
+def test_heterogeneous_fabrics_map_end_to_end_with_service_keying():
+    """At least two non-mesh / heterogeneous fabrics must map suite
+    kernels end-to-end (encode -> SAT -> regalloc -> verify_mapping runs
+    inside map_loop and raises on any violation), with placements
+    honouring per-PE capabilities and the service pooling sessions by the
+    new arch signature."""
+    svc = MappingService()
+    cases = [(arch("4x4-onehop", mem="col0"), "gsm"),
+             (arch("4x4-torus", regs=8, mem="border", mul="corners"),
+              "backprop")]
+    keys = set()
+    for spec, kernel in cases:
+        g = suite.get(kernel)
+        r = compile_request(MapRequest(dfg=g, arch=spec, timeout_s=90,
+                                       service=svc))
+        assert r.success, f"{kernel} failed on {spec}"
+        for n, (p, _c, _it) in r.placement.items():
+            assert spec.can_execute(p, g.nodes[n].op)
+        keys.add(topology_signature(spec))
+        # same spec, cache bypassed -> the pooled warm session is reused
+        warm = compile_request(MapRequest(dfg=suite.get(kernel), arch=spec,
+                                          timeout_s=90, service=svc,
+                                          use_cache=False))
+        assert warm.service.session_reused and warm.ii == r.ii
+    assert len(keys) == 2 and svc.n_sessions == 2
+
+
+def test_static_check_rejects_capability_violation():
+    spec = arch("3x3", mem="col0")
+    g = suite.get("gsm")
+    r = map_loop(g, spec, MapperConfig(solver="auto", timeout_s=60))
+    assert r.success
+    bad = dict(r.placement)
+    mem_node = next(n for n in g.nodes if g.nodes[n].is_mem)
+    non_mem_pe = next(p for p in range(spec.n_pes) if not spec.can_mem(p))
+    p, c, it = bad[mem_node]
+    bad[mem_node] = (non_mem_pe, c, it)
+    chk = static_check(g, spec, bad, r.ii)
+    assert not chk.ok
+    assert any("incapable" in e for e in chk.errors)
+
+
+# ----------------------------------------------- per-resource-class ResMII
+def test_res_mii_is_per_resource_class():
+    g = DFG("mulheavy")
+    iv = g.add("iv")
+    prev = iv
+    for _ in range(5):
+        prev = g.add("mul", [(prev, 0), (iv, 0)])
+    hom = arch("2x2")
+    restricted = arch("2x2", mul=[0])
+    assert res_mii(g, hom) == 2           # 6 nodes / 4 PEs
+    assert res_mii(g, restricted) == 5    # 5 muls / 1 mul-capable PE
+    assert min_ii(g, restricted) >= 5
+    # legacy mem_pes and the equivalent region agree
+    s = suite.get("sha")
+    assert res_mii(s, CGRA(2, 2, mem_pes=(0,))) == \
+        res_mii(s, arch("2x2", mem=[0]))
+
+
+def test_mul_restricted_min_ii_is_reached_by_mapping():
+    g = DFG("mulpair")
+    iv = g.add("iv")
+    m1 = g.add("mul", [(iv, 0), (iv, 0)])
+    m2 = g.add("mul", [(m1, 0), (iv, 0)])
+    g.add("add", [(m2, 0), (m1, 0)])
+    spec = arch("2x2", mul=[0, 1])
+    r = map_loop(g, spec, MapperConfig(solver="auto", timeout_s=60))
+    assert r.success and r.ii >= min_ii(g, spec)
+    for n in (m1, m2):
+        assert r.placement[n][0] in (0, 1)
+
+
+# --------------------------------------------------- per-PE register counts
+def test_regalloc_honours_per_pe_register_counts():
+    # n0 (iv) produces a value consumed two cycles later while n2 (const)
+    # overwrites the PE output register in between -> n0 needs one local
+    # register on its PE; the other PEs stay empty.
+    g = DFG("pressure")
+    n0 = g.add("iv")
+    n2 = g.add("const", imm=7)
+    n1 = g.add("add", [(n0, 0), (n0, 0)])
+    placement = {n0: (0, 0, 0), n2: (0, 1, 0), n1: (0, 2, 0)}
+    rich = arch("2x2", regs=[1, 0, 0, 0])
+    poor = arch("2x2", regs=[0, 1, 1, 1])
+    ok = allocate(g, rich, placement, 3)
+    assert ok.ok and ok.max_pressure == 1
+    bad = allocate(g, poor, placement, 3)
+    assert not bad.ok and bad.failed_pe == 0
+
+
+def test_map_loop_retries_ii_on_heterogeneous_register_pressure():
+    g = running_example()
+    # zero registers on every PE: either a bypass-only mapping exists at
+    # some II >= MII or the mapper reports failure — never a crash
+    r = map_loop(g, arch("2x2", regs=0),
+                 MapperConfig(solver="auto", timeout_s=60))
+    if r.success:
+        assert r.ii >= r.mii
+
+
+# --------------------------------------------- opposite-phase racing leg
+def test_sweep_flip_racer_matches_and_reports_leg():
+    cfg_flip = MapperConfig(solver="cdcl", timeout_s=90, race_flip=True)
+    cfg_no = MapperConfig(solver="cdcl", timeout_s=90, race_flip=False)
+    for name in ("sha", "nw"):
+        r_flip = map_loop(suite.get(name), CGRA(3, 3), cfg_flip,
+                          sweep_width=3)
+        r_no = map_loop(suite.get(name), CGRA(3, 3), cfg_no, sweep_width=3)
+        assert r_flip.success and r_no.success
+        assert r_flip.ii == r_no.ii
+        vias = {a.via for a in r_flip.attempts}
+        assert vias <= {"cdcl", "cdcl-flip", "walksat", "core", ""}
+        assert not any(a.via == "cdcl-flip" for a in r_no.attempts)
+
+
+def test_flip_leg_unsat_feeds_proven_unsat_registry():
+    """A flip-leg UNSAT is recorded like a failed-assumption core: force
+    the flip leg to race with zero delay on a window that starts below
+    MII and check the session learns the refuted IIs either way."""
+    from repro.core.sat.portfolio import SolverSession, solve_window
+    from repro.core.sat import SAT, UNSAT
+    g = running_example()
+    sess = SolverSession(EncoderSession(g, CGRA(2, 2)), method="cdcl")
+    iis = [2, 3]
+    for ii in iis:
+        sess.ensure_ii(ii)
+    cnfs = [sess.project(ii) for ii in iis]
+    res = solve_window(cnfs, method="cdcl", seed=0, session=sess, iis=iis,
+                       race_flip=True, flip_delay=0.0)
+    assert [r.status for r in res] == [UNSAT, SAT]
+    assert all(r.via in ("cdcl", "cdcl-flip") for r in res)
+    assert sess.is_proven_unsat(2)
