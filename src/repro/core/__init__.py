@@ -12,3 +12,4 @@ from .arch import ArchSpec, arch, op_class                    # noqa: F401
 from .cgra import CGRA, cgra_from_name                        # noqa: F401
 from .api import MapRequest, compile                          # noqa: F401
 from .mapper import MapperConfig, MappingResult, map_loop     # noqa: F401
+from .schedule import Infeasible                              # noqa: F401

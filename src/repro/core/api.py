@@ -28,12 +28,13 @@ see the README migration guide.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Optional, Union
+from typing import Dict, Optional, Union
 
 from .arch import ArchSpec, arch as _parse_arch
 from .cgra import CGRA
 from .dfg import DFG
 from .mapper import MapperConfig, MappingResult, map_loop
+from .schedule import Infeasible
 
 
 @dataclass
@@ -46,7 +47,11 @@ class MapRequest:
     config at all. ``session`` injects a warm
     :class:`~repro.core.sat.portfolio.SolverSession` whose formula matches
     this (dfg, arch, amo) shape; ``use_cache=False`` forces a solve on a
-    service-routed request (the warm-vs-cold benchmark knob).
+    service-routed request (the warm-vs-cold benchmark knob). ``lat`` is a
+    per-op-class latency table ({"mul": 2, ...}) applied when ``arch`` is
+    a fabric *name* — equivalent to the name's ``:mulK``-style suffixes;
+    use an explicit :class:`ArchSpec` to combine latencies with other
+    structural knobs.
     """
     dfg: DFG
     arch: Union[str, CGRA, ArchSpec] = "4x4"
@@ -55,6 +60,7 @@ class MapRequest:
     service: Union[None, str, object] = None   # None | "default" | instance
     session: Optional[object] = None
     use_cache: bool = True
+    lat: Optional[Dict[str, int]] = None
     # convenience overrides onto ``config``
     solver: Optional[str] = None
     timeout_s: Optional[float] = None
@@ -63,7 +69,10 @@ class MapRequest:
 
     def resolved_arch(self) -> Union[CGRA, ArchSpec]:
         if isinstance(self.arch, str):
-            return _parse_arch(self.arch)
+            return _parse_arch(self.arch, lat=self.lat)
+        if self.lat is not None:
+            raise ValueError("MapRequest.lat needs a fabric *name*; give "
+                             "an ArchSpec/CGRA its latency table directly")
         return self.arch
 
     def resolved_config(self) -> MapperConfig:
@@ -84,6 +93,13 @@ def compile(request: Union[MapRequest, DFG], /, **kw) -> MappingResult:
     standalone — the sequential Fig. 3 loop for ``sweep_width=1`` (or when
     routing retries are on), the parallel II-sweep engine above that —
     optionally on an injected warm session.
+
+    A structurally infeasible request (an op class in the DFG with zero
+    capable PEs on the fabric — ``MappingResult.infeasible``) raises
+    :class:`repro.core.schedule.Infeasible` with the precise reason
+    instead of returning an ordinary "no mapping found" failure: no II
+    sweep could ever succeed, and silently reporting one as exhausted
+    would hide a spec bug.
     """
     if isinstance(request, MapRequest):
         if kw:
@@ -93,6 +109,11 @@ def compile(request: Union[MapRequest, DFG], /, **kw) -> MappingResult:
     else:
         req = MapRequest(dfg=request, **kw)
     arch_obj = req.resolved_arch()
+    # structural-feasibility gate *before* dispatch so the caller gets the
+    # original exception with its structured fields (op_class, n_ops)
+    # rather than a reconstruction from the engines' flattened string
+    from .schedule import res_mii
+    res_mii(req.dfg, arch_obj)        # raises Infeasible with the reason
     cfg = req.resolved_config()
     svc = req.service
     if isinstance(svc, str):
@@ -102,7 +123,13 @@ def compile(request: Union[MapRequest, DFG], /, **kw) -> MappingResult:
         from .service import get_service
         svc = get_service()
     if svc is not None:
-        return svc.map(req.dfg, arch_obj, cfg, sweep_width=req.sweep_width,
-                       use_cache=req.use_cache)
-    return map_loop(req.dfg, arch_obj, cfg, sweep_width=req.sweep_width,
-                    session=req.session)
+        res = svc.map(req.dfg, arch_obj, cfg, sweep_width=req.sweep_width,
+                      use_cache=req.use_cache)
+    else:
+        res = map_loop(req.dfg, arch_obj, cfg, sweep_width=req.sweep_width,
+                       session=req.session)
+    if res.infeasible:
+        # belt-and-braces for engine- or cache-produced verdicts the gate
+        # above could not see (message-only: the gate is the typed path)
+        raise Infeasible(res.infeasible)
+    return res

@@ -17,6 +17,14 @@ classes it executes:
     real fabrics place sparsely),
   * ``"alu"`` — everything else (single-cycle ALU ops).
 
+Op classes also carry a *latency* (``ArchSpec.lat(cls)``, cycles from
+issue to result availability). The paper's fabric is fully unit-latency;
+HyCUBE/ADRES-class fabrics pipeline multipliers and memory ports over
+2+ cycles. Latencies default to 1 everywhere — and with every latency 1
+the whole mapping pipeline (KMS windows, CNF, register allocation,
+simulator) is bit-identical to the unit-latency model, so unit fabrics
+keep their exact pre-latency signatures and pooled solver sessions.
+
 Interconnects: ``"mesh"`` (paper Fig. 1), ``"torus"`` (wrap-around),
 ``"diag"`` (8-neighbour), ``"onehop"`` (mesh plus one-hop bypass links two
 steps along each row/column, HyCUBE-flavoured), and ``"custom"`` (an
@@ -29,6 +37,8 @@ The :func:`arch` builder parses compact fabric names —
     arch("8x8:r8")                       # ':rN' register-count suffix
     arch("4x4-onehop", mem="col0")       # loads/stores only on column 0
     arch("4x4", mul="corners", mem="row0")
+    arch("4x4-torus:r8:mul2:mem2")       # 2-cycle multipliers + memory
+    arch("4x4", lat={"mul": 3})          # explicit latency table
 
 — where ``mem=`` / ``mul=`` / ``alu=`` restrict an op class to a *region*
 (``"all"``, ``"none"``, ``"colK"``, ``"rowK"``, ``"corners"``,
@@ -121,20 +131,29 @@ def region(spec, rows: int, cols: int) -> FrozenSet[int]:
 # ----------------------------------------------------------- fabric names
 
 
-def parse_fabric(name: str) -> Tuple[int, int, str, Optional[int]]:
-    """Parse ``"RxC[-topology][:rN]"`` -> (rows, cols, interconnect, regs).
+def parse_fabric(name: str) -> Tuple[int, int, str, Optional[int],
+                                     Dict[str, int]]:
+    """Parse ``"RxC[-topology][:rN][:clsK...]"`` ->
+    (rows, cols, interconnect, regs, latencies).
 
-    ``regs`` is None when the name carries no ``:rN`` suffix. Examples:
-    ``"4x4"``, ``"4x4-torus"``, ``"8x8:r8"``, ``"4x4-one-hop:r2"``.
+    ``regs`` is None when the name carries no ``:rN`` suffix. Any number
+    of ``:aluK`` / ``:memK`` / ``:mulK`` suffixes set that op class's
+    latency to K cycles (``latencies`` is {} when none appear). Examples:
+    ``"4x4"``, ``"4x4-torus"``, ``"8x8:r8"``, ``"4x4-one-hop:r2"``,
+    ``"4x4-torus:r8:mul2:mem2"``.
     """
-    base, regs = name.strip(), None
-    if ":" in base:
-        base, _, suf = base.partition(":")
-        suf = suf.strip().lower()
-        if not (suf.startswith("r") and suf[1:].isdigit()):
-            raise ValueError(f"bad fabric suffix {suf!r} in {name!r} "
-                             f"(expected ':rN', e.g. '4x4:r8')")
-        regs = int(suf[1:])
+    parts = name.strip().split(":")
+    base, regs, lats = parts[0], None, {}
+    for suf in parts[1:]:
+        s = suf.strip().lower()
+        if s.startswith("r") and s[1:].isdigit():
+            regs = int(s[1:])
+        elif s[:3] in OP_CLASSES and s[3:].isdigit():
+            lats[s[:3]] = int(s[3:])
+        else:
+            raise ValueError(f"bad fabric suffix {s!r} in {name!r} "
+                             f"(expected ':rN' or ':aluK'/':memK'/':mulK', "
+                             f"e.g. '4x4:r8:mul2')")
     geom, _, topo = base.partition("-")
     interconnect = _TOPO_ALIASES.get(topo.strip().lower())
     if interconnect is None:
@@ -144,7 +163,7 @@ def parse_fabric(name: str) -> Tuple[int, int, str, Optional[int]]:
     if x != "x" or not (r.isdigit() and c.isdigit()):
         raise ValueError(f"bad fabric geometry {geom!r} in {name!r} "
                          f"(expected 'RxC', e.g. '4x4')")
-    return int(r), int(c), interconnect, regs
+    return int(r), int(c), interconnect, regs, lats
 
 
 # ----------------------------------------------------------------- spec
@@ -160,7 +179,11 @@ class ArchSpec:
     homogeneous fabric). ``pe_regs`` is per-PE local register counts (an
     int normalises to a uniform tuple). ``adjacency`` (required iff
     ``interconnect == "custom"``) lists, per PE, the PEs whose operands
-    may read *its* output register.
+    may read *its* output register. ``op_lat`` is the per-op-class
+    latency table (mapping or item tuple, cycles from issue to result);
+    absent classes — and ``None`` — mean unit latency, and an all-unit
+    table normalises to ``None`` so unit-latency fabrics compare and
+    ``signature()`` exactly as before latencies existed.
     """
     rows: int
     cols: int
@@ -168,6 +191,7 @@ class ArchSpec:
     pe_caps: Optional[Tuple[FrozenSet[str], ...]] = None
     pe_regs: Union[int, Tuple[int, ...]] = 4
     adjacency: Optional[Tuple[Tuple[int, ...], ...]] = None
+    op_lat: Optional[Tuple[Tuple[str, int], ...]] = None
     name: str = ""
 
     def __post_init__(self):
@@ -202,6 +226,18 @@ class ArchSpec:
         if any(r < 0 for r in regs):
             raise ValueError("negative register count")
         object.__setattr__(self, "pe_regs", regs)
+        # latencies: mapping/items -> canonical sorted tuple; all-unit -> None
+        if self.op_lat is not None:
+            lat = dict(self.op_lat)
+            bad = set(lat) - set(OP_CLASSES)
+            if bad:
+                raise ValueError(f"unknown op classes in op_lat: {bad}")
+            lat = {c: int(v) for c, v in lat.items()}
+            if any(v < 1 for v in lat.values()):
+                raise ValueError("op latencies must be >= 1 cycle")
+            lat = {c: v for c, v in lat.items() if v != 1}
+            object.__setattr__(self, "op_lat",
+                               tuple(sorted(lat.items())) or None)
         # adjacency: custom interconnect only; normalised (sorted, no self)
         if (self.adjacency is None) != (inter != "custom"):
             raise ValueError("adjacency is required iff "
@@ -296,15 +332,41 @@ class ArchSpec:
         """Local register count of PE ``p``."""
         return self.pe_regs[p]
 
+    # ----------------------------------------------------------- latencies
+    @cached_property
+    def _lat_map(self) -> Dict[str, int]:
+        return dict(self.op_lat or ())
+
+    def lat(self, cls: str) -> int:
+        """Latency (cycles, >= 1) of op class ``cls``; classes absent
+        from the table are single-cycle."""
+        return self._lat_map.get(cls, 1)
+
+    def lat_of(self, op: str) -> int:
+        """Latency of the DFG op ``op`` (via its op class)."""
+        return self._lat_map.get(op_class(op), 1)
+
+    @property
+    def unit_latency(self) -> bool:
+        """True when every op class is single-cycle (the paper's model)."""
+        return self.op_lat is None
+
     # ----------------------------------------------------------- identity
     def signature(self) -> Tuple:
         """Stable hashable identity of everything the encoding, register
         allocation, and simulator read off the fabric — the mapping
-        service's solver-pool / result-cache key component."""
-        return ("arch", self.rows, self.cols, self.interconnect,
-                self.adjacency,
-                tuple(tuple(sorted(c)) for c in self.pe_caps),
-                self.pe_regs)
+        service's solver-pool / result-cache key component. The latency
+        table is appended only when some class is multi-cycle, so
+        unit-latency fabrics keep their exact pre-latency signatures
+        (existing caches, pooled sessions, and proven-UNSAT registries
+        stay valid)."""
+        sig = ("arch", self.rows, self.cols, self.interconnect,
+               self.adjacency,
+               tuple(tuple(sorted(c)) for c in self.pe_caps),
+               self.pe_regs)
+        if self.op_lat is not None:
+            sig = sig + (("lat",) + self.op_lat,)
+        return sig
 
     def __str__(self) -> str:  # pragma: no cover
         n = self.n_pes
@@ -316,6 +378,8 @@ class ArchSpec:
             k = len(self._pes_by_class[cls])
             if k != n:
                 parts.append(f"{cls}={k}/{n}")
+        if self.op_lat is not None:
+            parts.append("lat=" + ",".join(f"{c}:{v}" for c, v in self.op_lat))
         label = f" {self.name!r}" if self.name else ""
         return f"Arch({', '.join(parts)}{label})"
 
@@ -324,23 +388,29 @@ class ArchSpec:
 
 
 def arch(name: str = "4x4", *, regs=None, mem=None, mul=None, alu=None,
+         lat: Optional[Dict[str, int]] = None,
          adjacency: Optional[Sequence[Iterable[int]]] = None) -> ArchSpec:
     """Build an :class:`ArchSpec` from a compact fabric name plus optional
     heterogeneity knobs.
 
-    ``name`` follows ``"RxC[-topology][:rN]"`` (see :func:`parse_fabric`).
-    ``regs`` overrides the register count (int, or a per-PE sequence).
-    ``mem`` / ``mul`` / ``alu`` restrict that op class to a *region* (see
-    :func:`region`); unset classes stay available on every PE.
-    ``adjacency`` switches the interconnect to ``"custom"`` with the given
-    per-PE consumer lists.
+    ``name`` follows ``"RxC[-topology][:rN][:clsK...]"`` (see
+    :func:`parse_fabric`). ``regs`` overrides the register count (int, or
+    a per-PE sequence). ``mem`` / ``mul`` / ``alu`` restrict that op
+    class to a *region* (see :func:`region`); unset classes stay
+    available on every PE. ``lat`` is a per-op-class latency table
+    ({"mul": 2, ...}; entries win over the name's ``:mulK``-style
+    suffixes, unset classes are single-cycle). ``adjacency`` switches the
+    interconnect to ``"custom"`` with the given per-PE consumer lists.
     """
-    rows, cols, interconnect, suffix_regs = parse_fabric(name)
+    rows, cols, interconnect, suffix_regs, suffix_lat = parse_fabric(name)
     if adjacency is not None:
         interconnect = "custom"
         adjacency = tuple(tuple(row) for row in adjacency)
     if regs is None:
         regs = suffix_regs if suffix_regs is not None else 4
+    lat_map = dict(suffix_lat)
+    if lat:
+        lat_map.update(lat)
     n = rows * cols
     caps = [set(OP_CLASSES) for _ in range(n)]
     for cls, spec in (("mem", mem), ("mul", mul), ("alu", alu)):
@@ -353,4 +423,6 @@ def arch(name: str = "4x4", *, regs=None, mem=None, mul=None, alu=None,
     return ArchSpec(rows, cols, interconnect,
                     tuple(frozenset(c) for c in caps),
                     regs if isinstance(regs, int) else tuple(regs),
-                    adjacency=adjacency, name=name)
+                    adjacency=adjacency,
+                    op_lat=tuple(sorted(lat_map.items())) or None,
+                    name=name)

@@ -29,7 +29,7 @@ from .cgra import CGRA
 from .dfg import DFG
 from .mapper import IIAttempt, MappingResult
 from .regalloc import allocate
-from .schedule import asap_alap, min_ii
+from .schedule import Infeasible, asap_alap, min_ii, node_latencies
 from .simulator import verify_mapping
 
 
@@ -54,7 +54,12 @@ def _heights(dfg: DFG) -> Dict[int, int]:
 
 def _attempt(dfg: DFG, cgra: CGRA, ii: int, rng: random.Random,
              max_ejects: int) -> Optional[Dict[int, Tuple[int, int, int]]]:
-    asap, alap, _ = asap_alap(dfg)
+    lat = node_latencies(dfg, cgra)
+    # uniform latencies make a completion clash imply an issue clash (the
+    # slot dict already forbids those), so the write-port scan below is
+    # needed only on mixed-latency fabrics
+    mixed_lat = len(set(lat.values())) > 1
+    asap, alap, _ = asap_alap(dfg, lat)
     heights = _heights(dfg)
     prio = sorted(dfg.nodes, key=lambda n: (-heights[n], rng.random()))
     place: Dict[int, Tuple[int, int]] = {}       # n -> (pe, flat t)
@@ -68,22 +73,32 @@ def _attempt(dfg: DFG, cgra: CGRA, ii: int, rng: random.Random,
                  for n in dfg.nodes}
 
     def compatible(n: int, p: int, t: int) -> bool:
+        # the same latency-shifted C3 window the SAT encoding uses:
+        # lat(producer) <= span <= II + lat(producer) - 1
         node = dfg.nodes[n]
         if not cgra.can_execute(p, node.op):
             return False
+        # output-register write-port conflict: a mixed-latency neighbour
+        # on this PE completing in our completion cycle (same-issue-slot
+        # clashes are handled by the slot dict / ejection path instead)
+        if mixed_lat:
+            for m, (pm, tm) in place.items():
+                if pm == p and tm % ii != t % ii \
+                        and (tm + lat[m]) % ii == (t + lat[n]) % ii:
+                    return False
         for s, dd in in_edges[n]:
             if s in place:
                 ps, ts = place[s]
                 if not cgra.reachable(ps, p):
                     return False
-                if not (1 <= t - ts + dd * ii <= ii):
+                if not (lat[s] <= t - ts + dd * ii <= ii + lat[s] - 1):
                     return False
         for d, dd in out_edges[n]:
             if d in place:
                 pd, td = place[d]
                 if not cgra.reachable(p, pd):
                     return False
-                if not (1 <= td - t + dd * ii <= ii):
+                if not (lat[n] <= td - t + dd * ii <= ii + lat[n] - 1):
                     return False
         return True
 
@@ -135,7 +150,11 @@ def map_heuristic(dfg: DFG, cgra: CGRA, cfg: BaselineConfig | None = None,
     rng = random.Random(cfg.seed)
     t_start = time.time()
     deadline = t_start + cfg.timeout_s
-    mii = min_ii(dfg, cgra)
+    try:
+        mii = min_ii(dfg, cgra)
+    except Infeasible as e:
+        return MappingResult(success=False, cgra=cgra, infeasible=str(e),
+                             total_time=time.time() - t_start)
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
     res = MappingResult(success=False, mii=mii, cgra=cgra)
 

@@ -31,11 +31,14 @@ class CGRA:
     topology: str = "mesh"
     # PE ids with memory access; None -> all PEs can load/store (paper default)
     mem_pes: Tuple[int, ...] | None = None
+    # per-op-class latency table as sorted (cls, cycles) items; None -> the
+    # paper's all-unit-latency model
+    latencies: Tuple[Tuple[str, int], ...] | None = None
 
     @cached_property
     def spec(self) -> ArchSpec:
         """The equivalent homogeneous :class:`ArchSpec` (ground truth for
-        neighbours, capabilities, and the service signature)."""
+        neighbours, capabilities, latencies, and the service signature)."""
         caps = None
         if self.mem_pes is not None:
             with_mem = frozenset(OP_CLASSES)
@@ -44,7 +47,8 @@ class CGRA:
             caps = tuple(with_mem if p in mem else without
                          for p in range(self.rows * self.cols))
         return ArchSpec(self.rows, self.cols, self.topology,
-                        pe_caps=caps, pe_regs=self.n_regs)
+                        pe_caps=caps, pe_regs=self.n_regs,
+                        op_lat=self.latencies)
 
     @property
     def n_pes(self) -> int:
@@ -79,6 +83,14 @@ class CGRA:
     def regs(self, p: int) -> int:
         return self.n_regs
 
+    def lat(self, cls: str) -> int:
+        """Latency (cycles) of op class ``cls`` (1 unless ``latencies``
+        says otherwise)."""
+        return self.spec.lat(cls)
+
+    def lat_of(self, op: str) -> int:
+        return self.spec.lat_of(op)
+
     def signature(self) -> Tuple:
         return self.spec.signature()
 
@@ -87,15 +99,19 @@ class CGRA:
 
 
 def cgra_from_name(name: str, **kw) -> CGRA:
-    """'4x4' -> CGRA(4, 4); the grammar also carries the interconnect and
-    register count: '4x4-torus' -> CGRA(4, 4, topology="torus"),
-    '8x8:r8' -> CGRA(8, 8, n_regs=8), '4x4-onehop:r2' combines both.
-    Explicit keyword arguments win over name suffixes."""
-    rows, cols, interconnect, regs = parse_fabric(name)
+    """'4x4' -> CGRA(4, 4); the grammar also carries the interconnect,
+    register count, and op-class latencies: '4x4-torus' ->
+    CGRA(4, 4, topology="torus"), '8x8:r8' -> CGRA(8, 8, n_regs=8),
+    '4x4:mul2:mem2' -> 2-cycle multipliers and memory ports,
+    '4x4-onehop:r2' combines suffixes. Explicit keyword arguments win
+    over name suffixes."""
+    rows, cols, interconnect, regs, lats = parse_fabric(name)
     if interconnect == "custom":
         raise ValueError("custom adjacency needs repro.core.arch.arch(), "
                          "not cgra_from_name()")
     kw.setdefault("topology", interconnect)
     if regs is not None:
         kw.setdefault("n_regs", regs)
+    if lats:
+        kw.setdefault("latencies", tuple(sorted(lats.items())))
     return CGRA(rows, cols, **kw)

@@ -2,18 +2,28 @@
 
 Literals are x_{n,p,c,it}: node ``n`` placed on PE ``p`` at kernel cycle ``c``
 with KMS iteration label ``it``. Flat mobility-schedule time is
-``t = it*II + c``; C3's Eq. 3 window is exactly the flat-time window
+``t = it*II + c``; C3's Eq. 3 window generalises the paper's to per-op
+latencies (lat(s) = producer's issue->result cycles):
 
-    1 - delta*II  <=  t_d - t_s  <=  (1 - delta)*II
+    lat(s) - delta*II  <=  t_d - t_s  <=  (1 - delta)*II + lat(s) - 1
 
-for an edge of loop-carried distance ``delta`` (delta=0 reduces to the
-paper's "c_d > c_s if same iteration label, c_d <= c_s if labels differ by
-one"). The upper bound is forced by the non-rotating register file: a value
-is overwritten by the producer's next kernel instance II cycles later.
+for an edge of loop-carried distance ``delta``: the consumer cannot issue
+before the producer's result exists (lower bound), and the value — written
+at t_s + lat(s), rewritten by the producer's next kernel instance II
+cycles later — is gone from the non-rotating register file after
+t_s + II + lat(s) - 1 (upper bound). With lat(s) = 1 everywhere this is
+bit-for-bit the paper's window ``1 - delta*II <= t_d - t_s <=
+(1 - delta)*II`` — the unit-latency CNF is unchanged down to clause order.
 
 Clause families:
   C1  exactly-one position per node                  (paper Eq. 1)
   C2  at-most-one node per (PE, kernel cycle)        (paper Eq. 2)
+      — plus, on multi-cycle fabrics, write-port conflicts: two nodes of
+      *different* latencies on one PE whose completions fold to the same
+      kernel cycle would write the single output register simultaneously.
+      With equal latencies a completion clash implies an issue clash that
+      Eq. 2 already forbids, so unit-latency fabrics emit zero extra
+      clauses (the bit-parity guarantee holds).
   C3  per-edge adjacency + timing. The paper ORs Eq. 4/5 conjunction terms;
       given C1, that disjunction is equivalent to the implication form used
       here: for every destination literal w,  (¬w ∨ compatible-src-lits...).
@@ -28,7 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .cgra import CGRA
 from .cnf import CNF, IncrementalCNF
 from .dfg import DFG
-from .schedule import KMS, asap_alap, build_kms
+from .schedule import KMS, asap_alap, build_kms, node_latencies
 
 
 @dataclass(frozen=True)
@@ -108,7 +118,11 @@ class EncoderSession:
         self.dfg = dfg
         self.cgra = cgra          # a CGRA or a heterogeneous ArchSpec
         self.amo = amo
-        self.asap, self.alap, self.length = asap_alap(dfg)
+        # per-node issue->result latencies from the fabric's op-class
+        # latency table (all 1 on the paper's fabric): they stretch the
+        # ASAP/ALAP windows and shift every C3 dependency window below
+        self.lat = node_latencies(dfg, cgra)
+        self.asap, self.alap, self.length = asap_alap(dfg, self.lat)
         # op-class -> PE compatibility: a node's candidate literals range
         # over exactly the PEs capable of its op class (mem/mul/alu), so
         # capability constraints are enforced by variable layout + C1
@@ -178,14 +192,37 @@ class EncoderSession:
             by_slot.setdefault((p, t % ii), []).append((p, t))
         return list(by_slot.values())
 
+    def c2w_clauses(self, ii: int):
+        """Yield output-register *write-port* conflict clauses for ``ii``:
+        at most one result may land on a PE's output register per kernel
+        cycle. C2 constrains issue slots, and with uniform latencies a
+        completion clash implies an issue clash — so clauses are emitted
+        only for pairs of nodes with *different* latencies (none at all
+        on a unit-latency fabric, preserving CNF bit-parity)."""
+        lay = self._ensure_layout()
+        lat = self.lat
+        groups: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        for v, (n, p, t) in enumerate(lay.info_t):
+            groups.setdefault((p, (t + lat[n]) % ii), []).append(
+                (v + 1, lat[n]))
+        for members in groups.values():
+            for a in range(len(members)):
+                for b in range(a + 1, len(members)):
+                    (u, lu), (w, lw) = members[a], members[b]
+                    if lu != lw:
+                        yield [-u, -w]
+
     def c3_clauses(self, ii: int):
         """Yield C3 per-edge implication clauses (Eq. 3/4/5 window) for
-        ``ii`` — the only clause family whose structure depends on II."""
+        ``ii`` — the only clause family whose structure depends on II.
+        The window is shifted by the producer's latency (see module
+        docstring); lat == 1 reproduces the paper's window exactly."""
         lay = self._ensure_layout()
         var_of_t = lay.var_of_t
         for src, dst, delta in self.dfg.edges():
-            lo = 1 - delta * ii
-            hi = (1 - delta) * ii
+            lat_s = self.lat[src]
+            lo = lat_s - delta * ii
+            hi = (1 - delta) * ii + lat_s - 1
             src_times = range(self.asap[src], self.alap[src] + 1)
             src_pes = self.allowed_pes[src]
             for td in range(self.asap[dst], self.alap[dst] + 1):
@@ -203,7 +240,7 @@ class EncoderSession:
     def encode(self, ii: int) -> Encoding:
         dfg, cgra = self.dfg, self.cgra
         lay = self._ensure_layout()
-        kms = build_kms(dfg, ii)
+        kms = build_kms(dfg, ii, lat=self.lat)
 
         cnf = CNF()
         cnf.n_vars = lay.n_vars
@@ -223,6 +260,10 @@ class EncoderSession:
         for group in self.c2_fold_groups(ii):
             lits = [v for key in group for v in lay.by_pt[key]]
             cnf.at_most_one(lits, self.amo)
+        # write-port conflicts between mixed-latency nodes (empty on
+        # unit-latency fabrics), counted with C2 as resource conflicts
+        for cl in self.c2w_clauses(ii):
+            cnf.add_clause(cl)
         n_c2 = cnf.n_clauses - n_c2
 
         n_c3 = cnf.n_clauses
@@ -306,6 +347,10 @@ class IncrementalEncoding:
                 # helper clauses
                 lits = [v for key in group for v in lay.by_pt[key]]
                 inc.at_most_one(lits, session.amo)
+        # write-port conflicts between mixed-latency nodes — same
+        # generator as the cold encoder (empty on unit-latency fabrics)
+        for cl in session.c2w_clauses(ii):
+            inc.add_clause(cl)
         # C3 timing windows for this II, clauses guarded by the layer
         # selector — same generator the cold encoder consumes
         for cl in session.c3_clauses(ii):

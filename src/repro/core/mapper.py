@@ -25,7 +25,7 @@ from .dfg import DFG
 from .encode import EncoderSession
 from .regalloc import RegAllocResult, allocate
 from .sat import SAT, UNSAT, solve
-from .schedule import min_ii
+from .schedule import Infeasible, min_ii
 from .simulator import verify_mapping
 
 
@@ -95,6 +95,10 @@ class MappingResult:
     total_time: float = 0.0
     mii: int = 0
     timed_out: bool = False
+    # structural-infeasibility verdict (e.g. an op class with zero capable
+    # PEs): the human-readable reason, set instead of running a doomed II
+    # sweep. None for every feasible request.
+    infeasible: Optional[str] = None
     # per-request reuse statistics when the request was served by a
     # MappingService (repro.core.service.RequestStats); None otherwise
     service: Optional[object] = None
@@ -268,7 +272,13 @@ def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
     dfg.validate()
     t_start = time.time()
     deadline = t_start + cfg.timeout_s
-    mii = min_ii(dfg, cgra)
+    try:
+        mii = min_ii(dfg, cgra)
+    except Infeasible as e:
+        # structural infeasibility (op class with zero capable PEs): a
+        # structured verdict instead of a 17-attempt doomed sweep
+        return MappingResult(success=False, cgra=cgra, infeasible=str(e),
+                             total_time=time.time() - t_start)
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
     res = MappingResult(success=False, mii=mii, cgra=cgra)
 

@@ -4,15 +4,22 @@ Post-SAT phase: for every PE, build the interference graph of the values
 produced there and colour it with that PE's local registers (per-PE counts
 via ``arch.regs(p)`` — heterogeneous fabrics give different PEs different
 register files).
-Lifetimes are *cyclic* intervals on the II-cycle kernel circle; the C3
-timing window guarantees every lifetime is <= II, so a value never
-interferes with its own next-iteration instance.
+
+Lifetimes honour the fabric's per-op-class *latency* model: a value exists
+from its producer's completion, t_n + lat(n), to its last consumption
+(multi-cycle producers therefore lengthen downstream lifetimes relative to
+the issue slot). Lifetimes are *cyclic* intervals on the II-cycle kernel
+circle; the C3 timing window bounds every completion-relative lifetime by
+II - 1, so a value never interferes with its own next-iteration instance.
+With all latencies 1 every interval, bypass decision, and pressure count
+below is identical to the original issue-based formulation.
 
 Output-register bypass (the paper's Eq. 5 delivery mode): if every consumer
-of a value reads it strictly before the next instruction executes on the
-producer PE, the value lives only in the PE output register and needs no
-local register. The allocator models both modes and prefers bypass —
-resolving the Eq. 4 / Eq. 5 disjunction that the SAT phase leaves open.
+of a value reads it strictly before the next result lands on the producer
+PE's output register, the value lives only in that output register and
+needs no local register. The allocator models both modes and prefers
+bypass — resolving the Eq. 4 / Eq. 5 disjunction that the SAT phase
+leaves open.
 
 Failure (any PE needs more colours than its register count) sends the
 Fig. 3 loop to II+1.
@@ -24,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .cgra import CGRA
 from .dfg import DFG
+from .schedule import node_latencies
 
 
 @dataclass
@@ -49,11 +57,14 @@ def allocate(dfg: DFG, cgra: CGRA,
              placement: Dict[int, Tuple[int, int, int]], ii: int,
              ) -> RegAllocResult:
     t = {n: it * ii + c for n, (p, c, it) in placement.items()}
+    lat = node_latencies(dfg, cgra)
     pe_of = {n: placement[n][0] for n in placement}
-    # kernel-cycle occupancy per PE (who writes the output register when)
+    # kernel-cycle occupancy per PE output register: results land at the
+    # producer's *completion* cycle, issue + lat (== issue + 1 on the
+    # paper's unit-latency fabric)
     writes: Dict[int, List[int]] = {}
     for n, (p, c, it) in placement.items():
-        writes.setdefault(p, []).append(c)
+        writes.setdefault(p, []).append((c + lat[n]) % ii)
 
     res = RegAllocResult(ok=True)
     for p in range(cgra.n_pes):
@@ -67,17 +78,22 @@ def allocate(dfg: DFG, cgra: CGRA,
             if life == 0:
                 res.bypass.append(n)
                 continue
+            # completion-relative lifetime: the value exists from the
+            # write at t_n + lat(n) through the last read (C3 bounds it
+            # by II - 1, so it never meets its own next instance)
+            life_w = max(life - lat[n], 0)
+            w0 = (t[n] + lat[n]) % ii
             # gap until the next write on this PE's output register
-            c0 = t[n] % ii
             gap = ii  # producer itself re-writes II cycles later
             for k in range(1, ii):
-                if (c0 + k) % ii in wcycles:
+                if (w0 + k) % ii in wcycles:
                     gap = k
                     break
-            if life <= gap:
+            if life_w < gap:
                 res.bypass.append(n)       # Eq. 5 delivery: output reg only
             else:
-                intervals[n] = ((c0 + 1) % ii, life)  # live (t_n, t_n+life]
+                # live [t_n+lat, t_n+life] on the kernel circle
+                intervals[n] = (w0, life_w + 1)
         # cyclic-interval interference graph
         ns = list(intervals)
         adj = {n: set() for n in ns}

@@ -74,17 +74,22 @@ def shape_signature(dfg: DFG, arch=None) -> Tuple:
     proven-UNSAT cores all transfer soundly).
 
     With ``arch`` the per-node component is the node's actual allowed-PE
-    tuple on that fabric (op-class capability aware — on a heterogeneous
-    fabric an ``add``-shaped and a ``mul``-shaped DFG must *not* share a
-    session); without it, the homogeneous-fabric abstraction (memory ops
-    are the only capability split) is used."""
+    tuple on that fabric plus its op *latency* there (op-class capability
+    and timing aware — on a heterogeneous fabric an ``add``-shaped and a
+    ``mul``-shaped DFG must *not* share a session, and on a fabric with
+    2-cycle multipliers two DFGs that differ only in which nodes are muls
+    produce different C3 windows even when every PE runs every class);
+    without it, the homogeneous-fabric abstraction (memory ops are the
+    only capability split, all latencies 1) is used."""
     if arch is None:
         nodes = tuple(
             (nid, dfg.nodes[nid].is_mem, len(dfg.nodes[nid].ins))
             for nid in sorted(dfg.nodes))
     else:
+        lat_of = getattr(arch, "lat_of", lambda op: 1)
         nodes = tuple(
-            (nid, arch.pes_for(dfg.nodes[nid].op), len(dfg.nodes[nid].ins))
+            (nid, arch.pes_for(dfg.nodes[nid].op),
+             lat_of(dfg.nodes[nid].op), len(dfg.nodes[nid].ins))
             for nid in sorted(dfg.nodes))
     edges = tuple(sorted(dfg.edges()))
     return (len(dfg.nodes), nodes, edges)

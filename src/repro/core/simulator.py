@@ -3,13 +3,19 @@
 Given a placement {node: (pe, cycle, iteration)} at a given II, this module
   1. statically checks the mapping invariants (C1/C2/C3 semantics:
      single placement, one node per (PE, kernel cycle), neighbour adjacency,
-     and the non-rotating-register timing window), and
+     and the non-rotating-register timing window — under the fabric's
+     per-op-class *latency* model: an edge s->d with loop distance delta
+     must satisfy lat(s) <= t_d - t_s + delta*II <= II + lat(s) - 1, the
+     consumer issuing no earlier than the producer's result exists and no
+     later than the producer's next kernel instance rewrites it), and
   2. *executes* the modulo schedule: instance (n, i) of node n for loop
-     iteration i runs at absolute cycle i*II + t_n on PE p_n; memory ops
-     execute in absolute-cycle order. The resulting per-iteration values and
-     final memory are compared against ``DFG.execute`` — a mapping is correct
+     iteration i issues at absolute cycle i*II + t_n on PE p_n and
+     completes lat(n) cycles later; memory ops commit in absolute
+     *completion* order. The resulting per-iteration values and final
+     memory are compared against ``DFG.execute`` — a mapping is correct
      iff pipelined execution is observationally equal to sequential
-     execution.
+     execution. (All latencies 1 — the paper's fabric — reproduces the
+     original checks and memory order exactly.)
 
 Also emits prolog / kernel / epilog instruction tables (paper Fig. 2b/2c).
 """
@@ -21,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 from .arch import op_class
 from .cgra import CGRA
 from .dfg import DFG
+from .schedule import node_latencies
 
 
 @dataclass
@@ -56,8 +63,11 @@ def static_check(dfg: DFG, cgra: CGRA, placement: Dict[int, Tuple[int, int, int]
     if set(placement) != set(dfg.nodes):
         errs.append("placement does not cover all nodes")
         return MappingCheck(False, errs)
+    lat = node_latencies(dfg, cgra)
     slots: Dict[Tuple[int, int], int] = {}
-    for n, (p, c, it) in placement.items():
+    wslots: Dict[Tuple[int, int], int] = {}
+    for n in sorted(placement):
+        p, c, it = placement[n]
         if not (0 <= p < cgra.n_pes):
             errs.append(f"node {n}: bad PE {p}")
         if not (0 <= c < ii):
@@ -69,16 +79,30 @@ def static_check(dfg: DFG, cgra: CGRA, placement: Dict[int, Tuple[int, int, int]
         if key in slots:
             errs.append(f"PE/cycle clash: nodes {slots[key]} and {n} at {key}")
         slots[key] = n
+        # output-register write port: two mixed-latency nodes on one PE
+        # may issue in different cycles yet *complete* in the same one —
+        # a simultaneous double write no real fabric supports (with equal
+        # latencies this is subsumed by the issue-slot clash above)
+        wkey = (p, (c + lat[n]) % ii)
+        if wkey in wslots and placement[wslots[wkey]][1] != c:
+            errs.append(f"output-register write clash: nodes "
+                        f"{wslots[wkey]} and {n} on PE {p} both complete "
+                        f"at kernel cycle {wkey[1]}")
+        wslots[wkey] = n
     t = {n: it * ii + c for n, (p, c, it) in placement.items()}
     for s, d, delta in dfg.edges():
         ps, pd = placement[s][0], placement[d][0]
         if not cgra.reachable(ps, pd):
             errs.append(f"edge {s}->{d}: PEs {ps},{pd} not adjacent")
+        # the consumer may not issue before the producer's result exists
+        # (lat(s) cycles after its issue) nor after the producer's next
+        # kernel instance rewrites it; lat == 1 is the paper's [1, II]
         span = t[d] - t[s] + delta * ii
-        if not (1 <= span <= ii):
+        lo, hi = lat[s], ii + lat[s] - 1
+        if not (lo <= span <= hi):
             errs.append(
-                f"edge {s}->{d} (dist {delta}): span {span} outside [1,{ii}]"
-                f" (t_s={t[s]}, t_d={t[d]})")
+                f"edge {s}->{d} (dist {delta}, lat {lat[s]}): span {span} "
+                f"outside [{lo},{hi}] (t_s={t[s]}, t_d={t[d]})")
     return MappingCheck(not errs, errs)
 
 
@@ -87,14 +111,17 @@ def execute_mapping(dfg: DFG, cgra: CGRA,
                     n_iters: int, mem: Dict[int, int] | None = None,
                     init: Dict[int, int] | None = None,
                     ) -> Tuple[List[Dict[int, int]], Dict[int, int]]:
-    """Execute the pipelined schedule. Memory ops run in absolute-cycle order
-    (ties: iteration, node id) — this is what the hardware would do, and what
-    exposes illegal reordering w.r.t. sequential semantics."""
+    """Execute the pipelined schedule. Memory ops commit in absolute
+    *completion*-cycle order, issue + lat(n) (ties: iteration, node id) —
+    this is what the hardware would do, and what exposes illegal
+    reordering w.r.t. sequential semantics. With unit latencies every
+    completion is issue + 1, i.e. exactly the original issue order."""
     mem = dict(mem or {})
     init = init or {}
     t = {n: it * ii + c for n, (p, c, it) in placement.items()}
-    # absolute execution order of (cycle, iteration, node)
-    sched = sorted((i * ii + t[n], i, n)
+    lat = node_latencies(dfg, cgra)
+    # absolute completion order of (cycle, iteration, node)
+    sched = sorted((i * ii + t[n] + lat[n], i, n)
                    for i in range(n_iters) for n in dfg.nodes)
     vals: List[Dict[int, int]] = [dict() for _ in range(n_iters)]
     for _, i, n in sched:
@@ -141,7 +168,10 @@ def verify_mapping(dfg: DFG, cgra: CGRA,
 def emit_code(dfg: DFG, cgra: CGRA,
               placement: Dict[int, Tuple[int, int, int]], ii: int) -> KernelCode:
     t = {n: it * ii + c for n, (p, c, it) in placement.items()}
-    length = max(t.values()) + 1
+    lat = node_latencies(dfg, cgra)
+    # stages cover through the last *completion* (== last issue + 1 on the
+    # paper's unit-latency fabric)
+    length = max(t[n] + lat[n] for n in t)
     n_stages = -(-length // ii)
     kernel: List[List[Optional[int]]] = [
         [None] * cgra.n_pes for _ in range(ii)]

@@ -53,7 +53,7 @@ from .mapper import (IIAttempt, MapperConfig, MappingResult, note_pruned_ii)
 from .regalloc import RegAllocResult, allocate
 from .sat import SAT, UNKNOWN, UNSAT
 from .sat.portfolio import solve_window
-from .schedule import min_ii
+from .schedule import Infeasible, min_ii
 from .simulator import verify_mapping
 
 
@@ -91,7 +91,11 @@ def map_sweep(dfg: DFG, cgra: CGRA, cfg: Optional[MapperConfig] = None,
     dfg.validate()
     t_start = time.time()
     deadline = t_start + cfg.timeout_s
-    mii = min_ii(dfg, cgra)
+    try:
+        mii = min_ii(dfg, cgra)
+    except Infeasible as e:
+        return MappingResult(success=False, cgra=cgra, infeasible=str(e),
+                             total_time=time.time() - t_start)
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
     res = MappingResult(success=False, mii=mii, cgra=cgra)
     sess = session

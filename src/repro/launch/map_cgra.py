@@ -8,11 +8,14 @@ CGRA sidecar could offload), maps each with SAT-MapIt, and prints II +
 verification per loop. Matmul-shaped compute is intentionally absent: it
 is not a modulo-scheduling target (it goes to the MXU / systolic array).
 
-``--cgra`` takes the full fabric grammar (``RxC[-topology][:rN]``, e.g.
-``4x4-torus``, ``8x8:r8``, ``4x4-onehop``), and ``--mem`` / ``--mul``
-restrict those op classes to a region (``col0``, ``row1``, ``corners``,
-``border``, ``even``/``odd``) — so heterogeneous fabrics sweep from the
-CLI. ``--check`` turns the report into a CI smoke: exit non-zero unless
+``--cgra`` takes the full fabric grammar
+(``RxC[-topology][:rN][:clsK...]``, e.g. ``4x4-torus``, ``8x8:r8``,
+``4x4-onehop``, ``4x4:mul2:mem2`` for 2-cycle multipliers and memory
+ports), and ``--mem`` / ``--mul`` restrict those op classes to a region
+(``col0``, ``row1``, ``corners``, ``border``, ``even``/``odd``) — so
+heterogeneous fabrics sweep from the CLI. A structurally infeasible
+combination (a loop needs an op class the fabric disables everywhere) is
+reported as INFEASIBLE with the reason, not as an exhausted sweep. ``--check`` turns the report into a CI smoke: exit non-zero unless
 every loop maps *and* every node landed on a capability-compatible PE.
 Every mapping is served through the unified ``compile(MapRequest(...))``
 front door (``repro.core.api``).
@@ -28,6 +31,7 @@ from ..core.api import MapRequest, compile as compile_request
 from ..core.arch import arch
 from ..core.mapper import MapperConfig
 from ..core.frontend import trace_loop_body
+from ..core.schedule import Infeasible
 
 
 def _norm_acc(i, acc, x):
@@ -122,11 +126,19 @@ def main() -> None:
     failures = []
     for name, fn, n_carry, loads in loops_for(cfg):
         g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
-        r = compile_request(MapRequest(
-            dfg=g, arch=cgra, config=MapperConfig(
-                solver="auto", timeout_s=60, routing=args.routing,
-                amo=args.amo, incremental=not args.cold),
-            service=service))
+        try:
+            r = compile_request(MapRequest(
+                dfg=g, arch=cgra, config=MapperConfig(
+                    solver="auto", timeout_s=60, routing=args.routing,
+                    amo=args.amo, incremental=not args.cold),
+                service=service))
+        except Infeasible as e:
+            # structural infeasibility — the fabric cannot run this loop's
+            # op mix at any II; report the reason instead of a doomed sweep
+            print(f"  {name:16s} nodes={g.n:2d}  INFEASIBLE: {e}")
+            if args.check:
+                failures.append(f"{name}: INFEASIBLE on {cgra} ({e})")
+            continue
         if args.check:
             if not r.success:
                 failures.append(f"{name}: NO MAPPING on {cgra}")
@@ -178,11 +190,14 @@ def main() -> None:
         for name, fn, n_carry, loads in loops_for(cfg):
             g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads,
                                    name=name)
-            r = compile_request(MapRequest(
-                dfg=g, arch=cgra, config=MapperConfig(
-                    solver="auto", timeout_s=60, routing=args.routing,
-                    amo=args.amo, incremental=not args.cold),
-                service=service))
+            try:
+                r = compile_request(MapRequest(
+                    dfg=g, arch=cgra, config=MapperConfig(
+                        solver="auto", timeout_s=60, routing=args.routing,
+                        amo=args.amo, incremental=not args.cold),
+                    service=service))
+            except Infeasible:
+                continue   # already reported in the first pass
             print(f"  warm {name:16s} II={r.ii} via={r.service.via} "
                   f"[{r.service.request_time*1e3:.1f}ms]")
         print(f"  warm pass total {_time.time()-t0:.2f}s; "

@@ -30,12 +30,18 @@ from repro.core.simulator import static_check
 
 # ------------------------------------------------------------ name grammar
 def test_parse_fabric_grammar():
-    assert parse_fabric("4x4") == (4, 4, "mesh", None)
-    assert parse_fabric("4x4-torus") == (4, 4, "torus", None)
-    assert parse_fabric("8x8:r8") == (8, 8, "mesh", 8)
-    assert parse_fabric("4x4-one-hop:r2") == (4, 4, "onehop", 2)
-    assert parse_fabric("2x3-diag") == (2, 3, "diag", None)
-    for bad in ("4y4", "4x4-ring", "4x4:8r", "4x4:r", "x4"):
+    assert parse_fabric("4x4") == (4, 4, "mesh", None, {})
+    assert parse_fabric("4x4-torus") == (4, 4, "torus", None, {})
+    assert parse_fabric("8x8:r8") == (8, 8, "mesh", 8, {})
+    assert parse_fabric("4x4-one-hop:r2") == (4, 4, "onehop", 2, {})
+    assert parse_fabric("2x3-diag") == (2, 3, "diag", None, {})
+    # latency suffixes compose with regs in any order
+    assert parse_fabric("4x4:mul2") == (4, 4, "mesh", None, {"mul": 2})
+    assert parse_fabric("4x4-torus:r8:mul2:mem2") == \
+        (4, 4, "torus", 8, {"mul": 2, "mem": 2})
+    assert parse_fabric("4x4:mem3:r2") == (4, 4, "mesh", 2, {"mem": 3})
+    for bad in ("4y4", "4x4-ring", "4x4:8r", "4x4:r", "x4", "4x4:mul",
+                "4x4:fpu2"):
         with pytest.raises(ValueError):
             parse_fabric(bad)
 

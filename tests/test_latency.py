@@ -1,0 +1,372 @@
+"""Multi-cycle op latencies (PR 5): the per-op-class timing model.
+
+Covers, per the acceptance criteria:
+  * unit-latency parity — with every latency 1 the CNF is *bit-identical*
+    (same clause lists, same variable numbering, cold and incremental) to
+    the default fabric's on every suite kernel x {2x2, 3x3, 4x4} (33
+    cells), and signatures/IIs are unchanged;
+  * hand-computed ASAP/ALAP/RecMII with a multi-cycle mul inside a
+    loop-carried cycle, plus the parallel-edge and enumeration-cap
+    fixes in rec_mii;
+  * the mapper's II respects the latency-aware RecMII and the simulator
+    validates (and its static check *rejects* a mapping violating a
+    2-cycle latency);
+  * register-allocation lifetimes lengthen with producer latency;
+  * res_mii's structured infeasibility (zero capable PEs) instead of a
+    doomed sweep, surfaced as a clean compile() error;
+  * the fabric grammar / signature / service-keying extensions.
+"""
+import pytest
+
+from repro.core import suite
+from repro.core.api import MapRequest, compile as compile_request
+from repro.core.arch import ArchSpec, arch
+from repro.core.cgra import CGRA, cgra_from_name
+from repro.core.dfg import DFG, running_example
+from repro.core.encode import EncoderSession
+from repro.core.mapper import MapperConfig, map_loop
+from repro.core.regalloc import allocate
+from repro.core.sat.portfolio import SolverSession
+from repro.core.schedule import (Infeasible, asap_alap, min_ii,
+                                 node_latencies, rec_mii, res_mii)
+from repro.core.service import MappingService, shape_signature
+from repro.core.simulator import static_check, verify_mapping
+
+_PARITY_SIZES = ["2x2", "3x3", "4x4"]
+_UNIT_LAT = {"alu": 1, "mem": 1, "mul": 1}
+
+
+def _loop_carried_mul() -> DFG:
+    """iv -> add -> mul, with mul feeding add back at distance 1."""
+    g = DFG("lcmul")
+    iv = g.add("iv")
+    acc = g.add("add", [(iv, 0), (iv, 0)], name="acc")
+    m = g.add("mul", [(acc, 0), (acc, 0)], name="m")
+    g.nodes[acc].ins = ((iv, 0), (m, 1))
+    g.validate()
+    return g
+
+
+# ------------------------------------------------------ unit-latency parity
+@pytest.mark.parametrize("name", suite.names())
+def test_unit_latency_cnf_bit_identical_across_suite(name):
+    """An explicit all-unit latency table must be a no-op: identical
+    clause *lists* (not just multisets) and variable counts on every
+    suite kernel x {2x2, 3x3, 4x4}, for both the cold per-II encoder and
+    the incremental layered projection — so every pre-latency cache,
+    session, and proven-UNSAT registry stays valid."""
+    for size in _PARITY_SIZES:
+        g = suite.get(name)
+        plain, explicit = arch(size), arch(size, lat=dict(_UNIT_LAT))
+        assert plain == explicit                     # normalises to None
+        assert plain.signature() == explicit.signature()
+        ii = min_ii(g, plain)
+        assert ii == min_ii(g, explicit)
+        a = EncoderSession(g, plain).encode(ii)
+        b = EncoderSession(g, explicit).encode(ii)
+        assert a.cnf.n_vars == b.cnf.n_vars
+        assert a.cnf.clauses == b.cnf.clauses        # bit-identical, ordered
+        assert a.stats == b.stats
+        inc_a = SolverSession(EncoderSession(g, plain)).project(ii)
+        inc_b = SolverSession(EncoderSession(g, explicit)).project(ii)
+        assert inc_a.clauses == inc_b.clauses
+        assert inc_a.n_vars == inc_b.n_vars
+
+
+def test_unit_latency_identical_ii_cold_and_incremental():
+    for name in ("sha", "nw", "bitcount"):
+        for incremental in (True, False):
+            cfg = MapperConfig(solver="auto", timeout_s=60,
+                               incremental=incremental)
+            r_plain = map_loop(suite.get(name), arch("3x3"), cfg)
+            r_unit = map_loop(suite.get(name),
+                              arch("3x3", lat=dict(_UNIT_LAT)), cfg)
+            assert r_plain.success and r_unit.success
+            assert r_plain.ii == r_unit.ii
+            assert r_plain.mii == r_unit.mii
+
+
+# ------------------------------------------------- hand-computed schedules
+def test_asap_alap_with_two_cycle_mul_hand_computed():
+    # chain iv -> mul -> add with a 2-cycle mul: add cannot issue before
+    # t=3 and the schedule runs through the add's completion at t=4
+    g = DFG("chain")
+    iv = g.add("iv")
+    m = g.add("mul", [(iv, 0), (iv, 0)])
+    a = g.add("add", [(m, 0), (m, 0)])
+    lat = node_latencies(g, arch("2x2:mul2"))
+    assert lat == {iv: 1, m: 2, a: 1}
+    asap, alap, L = asap_alap(g, lat)
+    assert (asap[iv], asap[m], asap[a]) == (0, 1, 3)
+    assert L == 4
+    assert (alap[iv], alap[m], alap[a]) == (0, 1, 3)
+    # unit latencies reproduce the old table exactly
+    assert asap_alap(g) == asap_alap(g, {n: 1 for n in g.nodes})
+
+
+def test_rec_mii_with_multicycle_mul_in_loop_carried_cycle():
+    g = _loop_carried_mul()
+    # cycle acc -> m -> acc at distance 1: unit latency sum 2
+    assert rec_mii(g) == 2
+    # 3-cycle mul: latency sum 1 + 3 = 4 over distance 1
+    lat3 = node_latencies(g, arch("3x3:mul3"))
+    assert rec_mii(g, lat3) == 4
+    assert min_ii(g, arch("3x3:mul3")) == 4
+    # paper running example: distance-1 cycle n10 -> n11 (both adds), so
+    # mul latency does not touch it but alu latency does
+    e = running_example()
+    assert rec_mii(e, node_latencies(e, arch("4x4:mul4"))) == 2
+    assert rec_mii(e, node_latencies(e, arch("4x4:alu2"))) == 4
+
+
+def test_rec_mii_parallel_edges_each_contribute():
+    # two edges between the same pair with different distances: the
+    # distance-1 edge's cycle bound must survive the distance-3 edge
+    g = DFG("par")
+    iv = g.add("iv")
+    a = g.add("add", [(iv, 0), (iv, 0)])
+    b = g.add("add", [(a, 0), (a, 0)])
+    g.nodes[a].ins = ((b, 3), (b, 1))
+    g.validate()
+    lat = {iv: 1, a: 2, b: 2}
+    # a -> b (dist 0), b -> a closes at distance 1 (and 3): max bound is
+    # ceil((2+2)/(0+1)) = 4, the distance-3 parallel edge gives only 2
+    assert rec_mii(g, lat) == 4
+    assert rec_mii(g) == 2
+    # order independence: swapping the parallel-edge order changes nothing
+    g.nodes[a].ins = ((b, 1), (b, 3))
+    assert rec_mii(g, lat) == 4
+
+
+def test_rec_mii_cycle_cap_falls_back_to_exact_bound():
+    # a dense all-to-all accumulator graph has combinatorially many simple
+    # cycles; with the enumeration capped at 1 the Bellman-Ford fallback
+    # must still return the exact RecMII
+    g = DFG("dense")
+    n = 7
+    ids = [g.add("iv")]
+    for i in range(1, n):        # phi nodes admit any input arity
+        ids.append(g.add("phi", [(ids[i - 1], 0)]))
+    for i in range(1, n):        # back-edges from everything to everything
+        for j in range(i, n):
+            g.nodes[ids[i]].ins = g.nodes[ids[i]].ins + ((ids[j], 1),)
+    g.validate()
+    exact = rec_mii(g)                       # full enumeration
+    capped = rec_mii(g, max_cycles=1)        # forced fallback
+    assert capped == exact
+    lat = {nid: 2 for nid in g.nodes}
+    assert rec_mii(g, lat, max_cycles=1) == rec_mii(g, lat)
+
+
+# ------------------------------------------------ mapper + simulator + CNF
+def test_mapper_respects_latency_aware_recmii_and_simulator_validates():
+    """Acceptance: a DFG with a 2-cycle op in a loop-carried cycle maps at
+    an II >= the latency-aware RecMII and the produced mapping passes the
+    latency-aware simulator (verify_mapping also runs inside map_loop)."""
+    g = _loop_carried_mul()
+    fabric = cgra_from_name("3x3:mul2")
+    lat = node_latencies(g, fabric)
+    assert rec_mii(g, lat) == 3
+    r = map_loop(g, fabric, MapperConfig(solver="auto", timeout_s=60))
+    assert r.success and r.ii >= 3 > rec_mii(g)
+    chk = verify_mapping(g, fabric, r.placement, r.ii, n_iters=7)
+    assert chk.ok, chk.errors
+    # sweep engine agrees with the sequential reference
+    rs = map_loop(_loop_carried_mul(), fabric,
+                  MapperConfig(solver="auto", timeout_s=60), sweep_width=3)
+    assert rs.success and rs.ii == r.ii
+
+
+def test_static_check_rejects_two_cycle_latency_violation():
+    # iv -> mul -> add chain on a 2-cycle-mul fabric: a placement where
+    # the add issues only 1 cycle after the mul is illegal (span < lat)
+    g = DFG("viol")
+    iv = g.add("iv")
+    m = g.add("mul", [(iv, 0), (iv, 0)])
+    a = g.add("add", [(m, 0), (m, 0)])
+    unit, mul2 = CGRA(2, 2), cgra_from_name("2x2:mul2")
+    placement = {iv: (0, 0, 0), m: (0, 1, 0), a: (1, 2, 0)}
+    assert static_check(g, unit, placement, 4).ok
+    chk = static_check(g, mul2, placement, 4)
+    assert not chk.ok
+    assert any("lat 2" in e and "outside" in e for e in chk.errors)
+    # pushing the consumer one cycle out satisfies the 2-cycle latency
+    ok = dict(placement)
+    ok[a] = (1, 3, 0)
+    assert static_check(g, mul2, ok, 4).ok
+
+
+def test_c3_window_shifts_by_producer_latency():
+    from repro.core.sat import SAT, UNSAT, solve
+    g = _loop_carried_mul()
+    # the 2-cycle mul stretches the add's ASAP (result exists 2 cycles
+    # after the mul issues) ...
+    enc_u = EncoderSession(g, arch("3x3")).encode(2)
+    enc_l = EncoderSession(g, arch("3x3:mul2")).encode(2)
+    assert enc_l.kms.length > enc_u.kms.length
+    # ... and II=2 — feasible under unit latencies — becomes UNSAT: the
+    # acc -> mul -> acc recurrence now needs 3 cycles per iteration
+    assert solve(enc_u.cnf, "auto")[0] == SAT
+    assert solve(enc_l.cnf, "auto")[0] == UNSAT
+    assert solve(EncoderSession(g, arch("3x3:mul2")).encode(3).cnf,
+                 "auto")[0] == SAT
+
+
+# --------------------------------------------------- regalloc under latency
+def test_regalloc_lifetimes_track_completion_time():
+    # mul m issues at kernel cycle 0, a const on the same PE writes the
+    # output register at cycle 2, and m's consumer reads 3 cycles after
+    # m's issue. Unit latency: m's value (written at 1) must survive the
+    # const's write at 2 -> local register. 3-cycle mul: the write lands
+    # at 3 and the read happens that same cycle -> pure bypass. Both
+    # placements are write-clash free on both fabrics (completions 1,2 /
+    # 3,2 on PE0) and pass the latency-aware static check.
+    g = DFG("life")
+    iv = g.add("iv")
+    m = g.add("mul", [(iv, 0), (iv, 0)])
+    x = g.add("const", imm=1)
+    a = g.add("add", [(m, 0), (m, 0)])
+    ii = 4
+    placement = {iv: (1, 2, 0), m: (0, 0, 1), x: (0, 1, 1), a: (1, 3, 1)}
+    unit = arch("2x2", regs=1)
+    mul3 = arch("2x2:mul3", regs=1)
+    assert static_check(g, unit, placement, ii).ok
+    assert static_check(g, mul3, placement, ii).ok
+    ra_u = allocate(g, unit, placement, ii)
+    ra_l = allocate(g, mul3, placement, ii)
+    assert ra_u.ok and ra_l.ok
+    assert m in ra_u.regs and m not in ra_u.bypass
+    assert m in ra_l.bypass and m not in ra_l.regs
+    # zero registers on PE0: only the bypassing multi-cycle fabric fits
+    assert not allocate(g, arch("2x2", regs=[0, 4, 4, 4]),
+                        placement, ii).ok
+    assert allocate(g, arch("2x2:mul3", regs=[0, 4, 4, 4]),
+                    placement, ii).ok
+    # end-to-end: a mapped multi-cycle kernel passes regalloc + simulator
+    r = map_loop(suite.get("gsm"), cgra_from_name("3x3:mul2:mem2"),
+                 MapperConfig(solver="auto", timeout_s=90))
+    assert r.success and r.regalloc.ok
+
+
+def test_output_register_write_clash_rejected_and_never_encoded():
+    """Two mixed-latency nodes on one PE completing in the same kernel
+    cycle double-write the single output register: static_check must
+    reject it, and the encoder's write-port clauses must make such
+    placements unsatisfiable (C2 alone cannot — the *issue* slots
+    differ)."""
+    from repro.core.sat import SAT, solve
+    g = DFG("clash")
+    iv = g.add("iv")
+    m = g.add("mul", [(iv, 0), (iv, 0)])     # lat 2 on the mul2 fabric
+    b = g.add("add", [(iv, 0), (iv, 0)])     # lat 1
+    d = g.add("add", [(m, 0), (b, 0)])
+    mul2 = cgra_from_name("2x2:mul2")
+    ii = 4
+    # on PE0, m issues at 1 (completes 1+2=3), b at 2 (completes 2+1=3):
+    # an output-register write clash on the 2-cycle-mul fabric only
+    bad = {iv: (1, 0, 0), m: (0, 1, 0), b: (0, 2, 0), d: (1, 3, 0)}
+    chk = static_check(g, mul2, bad, ii)
+    assert not chk.ok
+    assert any("write clash" in e for e in chk.errors)
+    assert static_check(g, CGRA(2, 2), bad, ii).ok   # unit: legal
+    # every SAT model of the latency-aware encoding decodes to a
+    # placement the latency-aware static check accepts
+    enc = EncoderSession(g, mul2).encode(ii)
+    status, model = solve(enc.cnf, "auto")
+    assert status == SAT
+    placement = enc.decode(model)
+    assert static_check(g, mul2, placement, ii).ok
+    # and the bad placement's literals are jointly forbidden by the CNF
+    vm = enc.var_of[(m, 0, 1, 0)]
+    vb = enc.var_of[(b, 0, 2, 0)]
+    assert tuple(sorted((-vm, -vb))) in {tuple(sorted(c))
+                                         for c in enc.cnf.clauses}
+    # unit-latency fabrics emit zero write-port clauses (bit parity)
+    sess = EncoderSession(g, CGRA(2, 2))
+    assert not list(sess.c2w_clauses(ii))
+
+
+# ----------------------------------------------- structured infeasibility
+def test_res_mii_zero_supporters_is_structured_infeasibility():
+    g = suite.get("sha")                     # contains loads/stores
+    spec = arch("3x3", mem="none")
+    with pytest.raises(Infeasible) as ei:
+        res_mii(g, spec)
+    assert ei.value.op_class == "mem" and ei.value.n_ops >= 1
+    with pytest.raises(Infeasible):
+        min_ii(g, spec)
+    # engines return a structured verdict instead of a doomed sweep
+    r = map_loop(g, spec, MapperConfig(solver="auto", timeout_s=10))
+    assert not r.success and r.infeasible and not r.attempts
+    assert "mem" in r.infeasible
+    rs = map_loop(suite.get("sha"), spec,
+                  MapperConfig(solver="auto", timeout_s=10), sweep_width=3)
+    assert not rs.success and rs.infeasible
+    # ... and compile() surfaces it as a clean front-door error
+    with pytest.raises(Infeasible, match="mem"):
+        compile_request(MapRequest(dfg=suite.get("sha"), arch=spec,
+                                   timeout_s=10))
+    # feasible classes still get finite bounds
+    assert res_mii(running_example(), spec) >= 1
+
+
+# ------------------------------------------------ grammar / keying / API
+def test_latency_grammar_and_signature():
+    a = arch("4x4-torus:r8:mul2:mem2")
+    assert a.interconnect == "torus" and a.pe_regs[0] == 8
+    assert a.lat("mul") == 2 and a.lat("mem") == 2 and a.lat("alu") == 1
+    assert a.lat_of("div") == 2 and a.lat_of("add") == 1
+    assert not a.unit_latency
+    # explicit lat= wins over the name suffix
+    assert arch("4x4:mul2", lat={"mul": 3}).lat("mul") == 3
+    # unit table normalises away: signature and equality unchanged
+    assert arch("4x4").signature() == arch("4x4:mul1").signature()
+    assert arch("4x4").unit_latency and arch("4x4:mul1").unit_latency
+    # non-unit latencies key differently (service pools must not mix)
+    assert arch("4x4").signature() != arch("4x4:mul2").signature()
+    assert cgra_from_name("4x4:mul2").signature() == \
+        arch("4x4:mul2").signature()
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, op_lat=(("mul", 0),))
+    with pytest.raises(ValueError):
+        ArchSpec(2, 2, op_lat=(("fpu", 2),))
+
+
+def test_shape_signature_distinguishes_latency_classes():
+    def build(op):
+        g = DFG("shape")
+        x = g.add("iv")
+        g.add(op, [(x, 0), (x, 0)])
+        return g
+    g_add, g_mul = build("add"), build("mul")
+    hom = arch("3x3")
+    lat = arch("3x3:mul2")
+    # homogeneous unit fabric: add/mul still share a shape class
+    assert shape_signature(g_add, hom) == shape_signature(g_mul, hom)
+    # 2-cycle muls: identical allowed-PE sets but different C3 windows
+    assert shape_signature(g_add, lat) != shape_signature(g_mul, lat)
+
+
+def test_service_pools_latency_fabrics_separately():
+    svc = MappingService()
+    g = _loop_carried_mul()
+    r_unit = svc.map(g, arch("3x3"), MapperConfig(solver="auto",
+                                                  timeout_s=60))
+    r_lat = svc.map(_loop_carried_mul(), arch("3x3:mul3"),
+                    MapperConfig(solver="auto", timeout_s=60))
+    assert r_unit.success and r_lat.success
+    assert r_lat.ii >= 4 > r_unit.ii
+    assert svc.n_sessions == 2               # no cross-latency session reuse
+    warm = svc.map(_loop_carried_mul(), arch("3x3:mul3"),
+                   MapperConfig(solver="auto", timeout_s=60),
+                   use_cache=False)
+    assert warm.service.session_reused and warm.ii == r_lat.ii
+
+
+def test_compile_maprequest_lat_field():
+    r = compile_request(MapRequest(dfg=_loop_carried_mul(), arch="3x3",
+                                   lat={"mul": 3}, timeout_s=60))
+    assert r.success and r.ii >= 4
+    with pytest.raises(ValueError):
+        MapRequest(dfg=_loop_carried_mul(), arch=arch("3x3"),
+                   lat={"mul": 3}).resolved_arch()

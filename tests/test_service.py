@@ -197,9 +197,11 @@ def test_service_ii_parity_across_suite(size):
 
 def test_unmappable_dfg_latches_all_unsat():
     """A memory node with no memory-capable PE gives an empty C1 clause:
-    the very first solve returns an *empty* failed-assumption core, the
-    session latches all_unsat, and the remaining II range is pruned
-    without further solving."""
+    the very first solve returns an *empty* failed-assumption core and
+    the session latches all_unsat. The mapping engines never even get
+    there any more — res_mii reports the zero-supporter class as a
+    structured infeasibility, so map_loop returns the reason with *zero*
+    solver attempts instead of a doomed sweep."""
     g = DFG("nomem")
     iv = g.add("iv")
     g.add("load", [(iv, 0)], imm=0)
@@ -212,7 +214,20 @@ def test_unmappable_dfg_latches_all_unsat():
     r = map_loop(g, cgra, MapperConfig(solver="cdcl", timeout_s=30),
                  session=sess)
     assert not r.success
-    assert len(r.attempts) == 1 and r.attempts[0].via == "core"
+    assert r.infeasible and "mem" in r.infeasible
+    assert not r.attempts
+    # the engines' all_unsat branch stays covered: a *feasible-looking*
+    # DFG whose session carries an empty core is pruned in one attempt
+    g2 = suite.get("bitcount")
+    plain = CGRA(2, 2)
+    sess2 = SolverSession(EncoderSession(g2, plain, "pairwise"),
+                          method="cdcl")
+    sess2.note_core(2, [])
+    assert sess2.all_unsat
+    r2 = map_loop(g2, plain, MapperConfig(solver="cdcl", timeout_s=30),
+                  session=sess2)
+    assert not r2.success and not r2.infeasible
+    assert len(r2.attempts) == 1 and r2.attempts[0].via == "core"
 
 
 # ------------------------------------------- budget-vs-UNSAT distinction
