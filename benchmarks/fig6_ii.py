@@ -160,6 +160,63 @@ def run(timeout_s: float = 120.0, names=None, heuristic_restarts: int = 30,
     return out
 
 
+def walksat_engine_bench(names=None, size: str = "3x3", steps: int = 4000,
+                         batch: int = 12, seed: int = 0) -> Dict[str, Dict]:
+    """Wall-clock of the three probSAT drive styles on each kernel's
+    II window [MII, MII+2]:
+
+      * ``seq``    — one ``solve_walksat`` call per CNF (no window
+        batching; each instance walks alone),
+      * ``host``   — the batched window with the per-chunk host loop
+        (one jitted chunk per host iteration, flags polled every chunk),
+      * ``device`` — the device-resident engine (the whole chunk schedule
+        inside one jitted while_loop, host polls every few chunks).
+
+    Engines are bit-compatible, so ``engines_agree`` (same statuses *and*
+    models) must be True on every cell — ``--check`` asserts it. XLA
+    compiles are paid in a warmup pass so the timings compare dispatch
+    styles, not compilation.
+    """
+    from repro.core.encode import EncoderSession
+    from repro.core.sat.walksat_jax import (solve_walksat,
+                                            solve_walksat_window)
+    from repro.core.schedule import min_ii
+    out: Dict[str, Dict] = {}
+    cgra = cgra_from_name(size)
+    for name in names or suite.names():
+        g = suite.get(name)
+        mii = max(min_ii(g, cgra), 1)
+        sess = EncoderSession(g, cgra)
+        iis = [mii, mii + 1, mii + 2]
+        cnfs = [sess.encode(ii).cnf for ii in iis]
+        for engine in ("host", "device"):
+            solve_walksat_window(cnfs, seed=seed, steps=64, batch=batch,
+                                 engine=engine)
+        t0 = time.time()
+        rseq = [solve_walksat(c, seed=seed, steps=steps, batch=batch)
+                for c in cnfs]
+        t_seq = time.time() - t0
+        t0 = time.time()
+        rh = solve_walksat_window(cnfs, seed=seed, steps=steps, batch=batch,
+                                  engine="host")
+        t_host = time.time() - t0
+        t0 = time.time()
+        rd = solve_walksat_window(cnfs, seed=seed, steps=steps, batch=batch,
+                                  engine="device")
+        t_dev = time.time() - t0
+        out[f"{name}/{size}"] = {
+            "iis": iis,
+            "seq_time": round(t_seq, 3),
+            "host_time": round(t_host, 3),
+            "device_time": round(t_dev, 3),
+            "seq_statuses": [s for s, _ in rseq],
+            "host_statuses": [s for s, _ in rh],
+            "device_statuses": [s for s, _ in rd],
+            "engines_agree": rh == rd,
+        }
+    return out
+
+
 def summarize(results: Dict) -> Dict:
     """The paper's headline stats over all cells, plus sweep-vs-sequential
     equivalence and wall-clock comparison (aggregated per kernel)."""
@@ -253,12 +310,20 @@ def summarize(results: Dict) -> Dict:
 
 
 def main(quick: bool = False, amo: str = "pairwise",
-         check: bool = False, sizes=None) -> None:
+         check: bool = False, sizes=None,
+         bench_out: str = "BENCH_sweep.json") -> None:
     names = ["sha", "gsm", "srand", "bitcount", "nw"] if quick else None
     print("AMO clause counts (pairwise vs Sinz sequential, at MII on 4x4):")
     for name, counts in amo_clause_report(names).items():
         print(f"  {name:10s} pairwise={counts['pairwise']:6d} "
               f"sequential={counts['sequential']:6d}")
+    engines = walksat_engine_bench(
+        names, steps=2000 if quick else 4000, batch=8 if quick else 12)
+    print("walksat engines (seq per-CNF vs host window vs device-resident):")
+    for k, v in engines.items():
+        print(f"  {k:16s} seq={v['seq_time']:7.3f}s "
+              f"host={v['host_time']:7.3f}s device={v['device_time']:7.3f}s "
+              f"agree={v['engines_agree']}")
     res = run(timeout_s=30 if quick else 120, names=names,
               heuristic_restarts=10 if quick else 30, amo=amo, sizes=sizes)
     print("benchmark/size,mii,sat_ii,cold_ii,sweep_ii,service_ii,heur_ii,"
@@ -272,6 +337,18 @@ def main(quick: bool = False, amo: str = "pairwise",
               f"{int(v['service_cache_hit'])}")
     summary = summarize(res)
     print(json.dumps(summary, indent=1))
+    # the perf-trajectory artefact: per-kernel wall-clock of every mapping
+    # mode plus the walksat engine comparison (seq / host window /
+    # device-resident), machine-readable for run-over-run tracking
+    with open(bench_out, "w") as f:
+        json.dump({
+            "quick": quick,
+            "per_kernel_time": summary["per_kernel_time"],
+            "walksat_engines": engines,
+            "summary": {k: v for k, v in summary.items()
+                        if k != "per_kernel_time"},
+        }, f, indent=1, sort_keys=True)
+    print(f"wrote {bench_out}")
     if check:
         # CI smoke assertions: the parallel sweep must never report a
         # worse II than the sequential loop, the service's warm pass must
@@ -291,6 +368,11 @@ def main(quick: bool = False, amo: str = "pairwise",
                        f"{summary['service_ii_ne_cold_cells']} cells")
         if summary["service_cache_hit_cells"] != summary["service_cells"]:
             bad.append("cache misses on repeated requests")
+        disagree = [k for k, v in engines.items()
+                    if not v["engines_agree"]]
+        if disagree:
+            bad.append("walksat host/device engines disagree on "
+                       f"{disagree}")
         if bad:
             raise SystemExit("fig6 --check failed: " + "; ".join(bad))
         print("fig6 --check OK")
@@ -300,8 +382,11 @@ if __name__ == "__main__":
     import sys
     amo = "sequential" if "--amo=sequential" in sys.argv else "pairwise"
     sizes = None
+    bench_out = "BENCH_sweep.json"
     for a in sys.argv[1:]:
         if a.startswith("--sizes="):
             sizes = [s for s in a[len("--sizes="):].split(",") if s]
+        elif a.startswith("--bench-out="):
+            bench_out = a[len("--bench-out="):]
     main(quick="--quick" in sys.argv, amo=amo,
-         check="--check" in sys.argv, sizes=sizes)
+         check="--check" in sys.argv, sizes=sizes, bench_out=bench_out)

@@ -81,6 +81,9 @@ class IIAttempt:
     conflicts: Optional[int] = None          # conflicts spent on this II
     warm_hamming: Optional[int] = None       # walksat init vs final model
     evicted: Optional[int] = None            # learnt clauses evicted so far
+    # the complete solve that decided this II was seeded with a racer
+    # near-miss as CDCL saved phases (None on paths without the session)
+    phase_hinted: Optional[bool] = None
 
 
 @dataclass
@@ -136,7 +139,8 @@ def _try_ii(dfg: DFG, cgra: CGRA, ii: int, cfg: MapperConfig,
                         learned_retained=stats.learned_retained,
                         conflicts=stats.conflicts,
                         warm_hamming=stats.warm_hamming,
-                        evicted=stats.evicted)
+                        evicted=stats.evicted,
+                        phase_hinted=stats.phase_hinted)
         attempts.append(att)
         if status != SAT:
             return None

@@ -160,6 +160,10 @@ class SolveStats:
     # call was SAT/UNKNOWN or the backend produced no core
     core: Optional[List[int]] = None
     evicted: Optional[int] = None            # learnt clauses evicted so far
+    # the complete solve was seeded with the session's best (near-miss)
+    # assignment as CDCL saved phases — the walksat racer's asynchronous
+    # feedback channel into the complete leg
+    phase_hinted: bool = False
 
 
 class SolverSession:
@@ -217,6 +221,11 @@ class SolverSession:
         self.proven_unsat: Dict[int, Tuple[int, ...]] = {}
         self.all_unsat = False                # an empty core arrived
         self.pruned_total = 0                 # IIs skipped via a recorded core
+        # asynchronous racer->complete feedback accounting: near-miss
+        # assignments accepted into the warm state, and phase hints handed
+        # out to complete solves (see phase_hint())
+        self.near_miss_updates = 0
+        self.phase_hints_served = 0
 
     # ------------------------------------------------------------- formula
     def ensure_ii(self, ii: int) -> None:
@@ -362,6 +371,22 @@ class SolverSession:
                     or self.best_quality > n_unsat:
                 self.best_assign = list(assign[:nv])
                 self.best_quality = n_unsat
+                if n_unsat > 0:
+                    self.near_miss_updates += 1
+
+    def phase_hint(self) -> Optional[List[bool]]:
+        """The session's best assignment (model or near-miss) as a CDCL
+        saved-phase seed — the channel through which the walksat racer's
+        near-misses flow back into the complete leg asynchronously. A
+        near-miss that almost satisfies the formula is a strong prior on
+        the structured part of the assignment, so starting CDCL's phases
+        there tends to reach either a model or the conflicting core
+        faster. Locked copy (the racer updates concurrently)."""
+        with self._best_lock:
+            if self.best_assign is None:
+                return None
+            self.phase_hints_served += 1
+            return list(self.best_assign)
 
 
 def _hamming(a: List[bool], b: List[bool]) -> int:
@@ -450,14 +475,17 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
             accepted = False
             if status == SAT and accept is not None:
                 accepted = accept(i, model)
-                if not accepted and via in ("walksat", "cdcl-flip") \
-                        and complete:
-                    # provisional: a racer-leg model that fails the
-                    # caller's acceptance (e.g. regalloc) must not decide
-                    # this candidate — the session's own solver may yet
-                    # produce a model that passes, which is exactly what
-                    # the sequential reference would have judged. Leave
-                    # the candidate open for the session leg.
+                if not accepted and complete and (
+                        via in ("walksat", "cdcl-flip")
+                        or (stats is not None and stats.phase_hinted)):
+                    # provisional: a racer-leg model — or a session-leg
+                    # model whose search was steered by a racer phase
+                    # hint — that fails the caller's acceptance (e.g.
+                    # regalloc) must not decide this candidate: an
+                    # unhinted solve may yet produce a model that passes,
+                    # which is exactly what the sequential reference
+                    # would have judged. Leave the candidate open (the
+                    # session leg retries hinted SAT rejections unhinted).
                     return
             results[i] = WindowResult(status, model, via, time.time() - t0,
                                       stats)
@@ -504,6 +532,16 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                                 warm_hamming=_hamming(inits[i], model))
             deliver(i, SAT, model, "walksat", st)   # also records warm state
 
+        def on_near_miss_cb(i: int, n_unsat: int, assign) -> None:
+            # stream near-misses into the session *while the walk runs* —
+            # the session leg picks them up as CDCL phase hints for the
+            # candidates it hasn't started yet. Guarded by the window
+            # lock/closed pair like the final push below, so a late racer
+            # can never pollute a later window's warm-start state.
+            with lock:
+                if not closed.is_set():
+                    session.update_best(assign, n_unsat)
+
         try:
             solve_walksat_window(
                 cnfs, seed=seed, steps=walksat_steps, batch=walksat_batch,
@@ -511,7 +549,9 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                     s.is_set() for s in stops),
                 should_skip=lambda i: stops[i].is_set(),
                 on_sat=on_sat_cb, inits=inits,
-                near_miss=near if session is not None else None)
+                near_miss=near if session is not None else None,
+                on_near_miss=on_near_miss_cb if session is not None
+                else None)
         except Exception:   # incomplete leg must never take down the window
             pass
         if session is not None:
@@ -611,18 +651,40 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
         """The incremental complete leg: one persistent assumption-based
         solver, lowest II first. Sequential by design — candidate i's
         learned clauses are exactly what makes candidate i+1 cheap, which
-        replaces the cold path's process-parallel independent proofs."""
+        replaces the cold path's process-parallel independent proofs.
+
+        Each candidate's solve is seeded with the session's best
+        assignment as CDCL saved phases — near-misses the walksat racer
+        banked while earlier candidates were being proven flow straight
+        into later candidates' complete searches. A hinted SAT model the
+        caller rejects (regalloc) is provisional (see ``deliver``); the
+        leg then re-solves that candidate unhinted so its final verdict
+        is the one the sequential reference would have produced."""
         for i in range(K):
             if past_deadline():
                 break
             if stops[i].is_set():
                 continue
+            hint = session.phase_hint() if method == "cdcl" else None
             status, model, st = session.solve_complete(
                 iis[i],
-                stop=lambda: stops[i].is_set() or past_deadline())
+                stop=lambda: stops[i].is_set() or past_deadline(),
+                phase_hint=hint)
             if status == UNKNOWN and (stops[i].is_set() or past_deadline()):
                 continue   # cancelled / timed out; filled in at the end
+            st.phase_hinted = hint is not None
             deliver(i, status, model, method, st)
+            if st.phase_hinted and status == SAT:
+                with lock:
+                    still_open = results[i] is None and not closed.is_set()
+                if still_open and not stops[i].is_set():
+                    status, model, st = session.solve_complete(
+                        iis[i],
+                        stop=lambda: stops[i].is_set() or past_deadline())
+                    if status == UNKNOWN and (stops[i].is_set()
+                                              or past_deadline()):
+                        continue
+                    deliver(i, status, model, method, st)
 
     def run_flip_leg() -> None:
         """The second racing complete leg (ROADMAP PR 2 follow-up): a cold

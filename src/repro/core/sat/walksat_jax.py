@@ -1,10 +1,33 @@
-"""Batched probSAT/WalkSAT in JAX — the TPU-native mapper search path.
+"""Batched probSAT/WalkSAT in JAX — the accelerator-native mapper search path.
 
 The KMS CNF is lowered to dense padded tensors; a *batch* of candidate
 assignments walks in parallel (one probSAT chain per batch row), so clause
 evaluation becomes regular tensor work that the VPU/MXU executes well. On a
-pod the batch is sharded over the mesh with shard_map (see portfolio.py);
-the first chain to satisfy the formula wins.
+pod the batch is sharded over the mesh (see ``_maybe_shard_window``); the
+first chain to satisfy the formula wins.
+
+Two engines drive the chunked walk:
+
+  * ``engine="device"`` (default) — the whole chunk schedule runs inside a
+    single jitted :func:`jax.lax.while_loop`. Per-candidate solved flags,
+    first-solution snapshots, and best-over-all-chunks near-miss state are
+    device arrays; the host blocks only every ``_POLL_CHUNKS`` chunks on a
+    tiny status tuple (``jax.block_until_ready``) to poll ``stop()`` /
+    ``should_skip`` and extract freshly certified models. Chunk sizes are
+    *traced* values, so one XLA executable covers every chunk of the
+    progressive schedule instead of one compile per chunk length.
+  * ``engine="host"`` — the PR 1/2 reference loop: one jitted fixed-length
+    chunk per host iteration, flags polled after every chunk. Kept as the
+    bit-compatibility oracle (same seeds => same models as the device
+    engine) and selectable via ``REPRO_WALKSAT_ENGINE=host``.
+
+Both engines share one inner step (``_pick_flip_one`` + the flip/true-count
+update), so they consume the PRNG stream identically and return identical
+results for a fixed seed. On TPU/GPU the true-count evaluation routes
+through the ``kernels/clause_eval`` Pallas kernel and the flip+incremental
+true-count update through the fused ``kernels/flip_update`` kernel
+(``REPRO_SAT_KERNELS`` overrides: ``0`` forces the pure-jnp path, ``interpret``
+forces the kernels in interpret mode — the CPU-testable route).
 
 This solver is incomplete: it can certify SAT but returns UNKNOWN instead of
 UNSAT — the Fig. 3 loop then falls back to CDCL/Z3 for the UNSAT proof.
@@ -15,6 +38,7 @@ UNSAT — the Fig. 3 loop then falls back to CDCL/Z3 for the UNSAT proof.
 from __future__ import annotations
 
 import functools
+import os
 from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -23,6 +47,34 @@ import jax
 import jax.numpy as jnp
 
 from ..cnf import CNF
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+# chunks walked on-device between host polls of the status array (device
+# engine): larger values amortise dispatch, smaller values make stop()/
+# should_skip() more responsive. The per-chunk step count is already
+# bounded by formula size (see _chunk_plan), so 4 keeps cancellation
+# latency well under a second on real instances.
+_POLL_CHUNKS = 4
+
+
+class NonModelError(RuntimeError):
+    """A walksat leg returned an assignment that does not satisfy its CNF.
+
+    This is a *miscompiled-kernel / packer-bug* guard, not a user error: a
+    chain is only reported SAT after its padded true-count vector shows
+    every clause satisfied, so a failing ``CNF.check`` means the device
+    computation and the host formula disagree. Raised as a structured
+    error (never a bare ``assert``) so the guard survives ``python -O``.
+    """
+
+
+def _validate_model(cnf: CNF, model: List[bool], ctx: str) -> None:
+    if not cnf.check(model):
+        raise NonModelError(
+            f"walksat returned a non-model ({ctx}): device true-counts "
+            f"claim SAT but CNF.check fails on {cnf.n_vars} vars / "
+            f"{cnf.n_clauses} clauses")
 
 
 class PackedCNF(NamedTuple):
@@ -72,103 +124,192 @@ def true_counts_ref(packed: PackedCNF, assign: jnp.ndarray) -> jnp.ndarray:
 def true_counts_batch(packed: PackedCNF, assign: jnp.ndarray,
                       use_kernel: bool | None = None) -> jnp.ndarray:
     """Batched per-clause true counts [B, C]; routes to the Pallas
-    clause_eval kernel on TPU (VMEM-tiled), jnp oracle elsewhere."""
+    clause_eval kernel on TPU/GPU (compiled), jnp oracle elsewhere."""
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
+        use_kernel = jax.default_backend() in ("tpu", "gpu")
     if use_kernel:
         from ...kernels.clause_eval import true_counts as tc_kernel
         return tc_kernel(packed.cvars, packed.csign.astype(bool), assign)
     return jax.vmap(lambda a: true_counts_ref(packed, a))(assign)
 
 
-def _chains_core(packed: PackedCNF, assign0: jnp.ndarray, key: jnp.ndarray,
-                 steps: int, cb: float,
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """probSAT chains. assign0: [B, V+1] bool. Returns (solved [B], assign,
-    final per-clause true counts [B, C] — zero entries mark the unsat
-    clauses, the near-miss signal for warm starts)."""
+# ----------------------------------------------------------- kernel routing
 
-    def clause_sat(assign):                       # [V+1] -> [C] int32
-        return true_counts_ref(packed, assign)
+def _sat_kernels_mode() -> Optional[str]:
+    """How the walksat engines evaluate/update true counts.
 
-    def step(carry, _):
-        assign, tc, key = carry                   # [B,V+1], [B,C]
-        unsat = tc == 0                           # [B, C]
-        any_unsat = jnp.any(unsat, axis=-1)       # [B]
-        key, k1, k2 = jax.random.split(key, 3)
-        # pick a random unsat clause per chain
-        logits = jnp.where(unsat, 0.0, -1e30)
-        cidx = jax.random.categorical(k1, logits, axis=-1)      # [B]
-        vs = packed.cvars[cidx]                   # [B, Lmax]
-        vmask = vs > 0
-        # break count per candidate var: clauses where v is the sole support
-        occ_c = packed.ovars[vs]                  # [B, Lmax, Omax]
-        occ_s = packed.osign[vs]
-        occ_valid = occ_c >= 0
-        occ_cc = jnp.where(occ_valid, occ_c, 0)
-        flat = occ_cc.reshape(occ_cc.shape[0], -1)              # [B, L*O]
-        tc_at = jnp.take_along_axis(tc, flat, axis=-1).reshape(occ_c.shape)
-        a_at = jnp.take_along_axis(assign, vs, axis=-1)         # [B, Lmax]
-        supports = occ_s == a_at[..., None]       # var currently satisfies c'
-        brk = jnp.sum(occ_valid & supports & (tc_at == 1), axis=-1)  # [B,Lmax]
-        # probSAT polynomial heuristic: p ∝ (1 + brk)^-cb
-        w = jnp.where(vmask, -cb * jnp.log1p(brk.astype(jnp.float32)), -1e30)
-        pick = jax.random.categorical(k2, w, axis=-1)           # [B]
-        v_flip = jnp.take_along_axis(vs, pick[:, None], axis=-1)[:, 0]
-        v_flip = jnp.where(any_unsat, v_flip, 0)  # flip dummy var 0 if solved
-        # apply flip + incremental true-count update via occurrence lists
-        new_val = ~jnp.take_along_axis(assign, v_flip[:, None], axis=-1)[:, 0]
-        assign = assign.at[jnp.arange(assign.shape[0]), v_flip].set(new_val)
-        occ_cf = packed.ovars[v_flip]             # [B, Omax]
-        occ_sf = packed.osign[v_flip]
-        validf = occ_cf >= 0
-        delta = jnp.where(occ_sf == new_val[:, None], 1, -1)
-        delta = jnp.where(validf, delta, 0)
-        tc = tc + jnp.zeros_like(tc).at[
-            jnp.arange(tc.shape[0])[:, None], jnp.where(validf, occ_cf, 0)
-        ].add(delta)
-        return (assign, tc, key), None
+    ``None``   — pure-jnp path (the default on CPU).
+    ``"auto"`` — Pallas kernels, compiled (TPU Mosaic / GPU Triton).
+    ``"interpret"`` — Pallas kernels in interpret mode (CPU-testable).
 
-    tc0 = jax.vmap(clause_sat)(assign0)
-    (assign, tc, _), _ = jax.lax.scan(step, (assign0, tc0, key), None,
-                                      length=steps)
-    solved = ~jnp.any(tc == 0, axis=-1)
-    return solved, assign, tc
+    ``REPRO_SAT_KERNELS`` overrides: ``0``/``off`` => jnp everywhere,
+    ``interpret`` => interpret-mode kernels, ``1``/``compiled`` => compiled.
+    """
+    env = os.environ.get("REPRO_SAT_KERNELS", "").strip().lower()
+    if env in ("0", "false", "off", "jnp"):
+        return None
+    if env == "interpret":
+        return "interpret"
+    if env in ("1", "true", "on", "compiled"):
+        return "auto"
+    return "auto" if jax.default_backend() in ("tpu", "gpu") else None
 
 
-_run_chains = jax.jit(_chains_core, static_argnums=(3, 4))
+def _window_tc(cvars: jnp.ndarray, csign: jnp.ndarray, assign: jnp.ndarray,
+               kernels: Optional[str]) -> jnp.ndarray:
+    """Window true counts [K, B, C] — the inner evaluation of the sweep,
+    routed through the Pallas ``clause_eval`` kernel when enabled."""
+    if kernels is not None:
+        from ...kernels.clause_eval import true_counts_window
+        return true_counts_window(
+            cvars, csign, assign,
+            interpret=True if kernels == "interpret" else None)
+
+    def per_k(cv, cs, a):                     # a: [B, V+1]
+        mask = cv > 0
+        vals = a[:, cv] == cs[None]           # [B, C, L]
+        return jnp.sum(jnp.where(mask[None], vals, False),
+                       axis=-1).astype(jnp.int32)
+    return jax.vmap(per_k)(cvars, csign, assign)
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+# ------------------------------------------------------------ probSAT step
+
+def _pick_flip_one(cvars, ovars, osign, assign, tc, key, cb):
+    """One probSAT variable pick for a batch of chains of one CNF.
+
+    assign: [B, V+1] bool, tc: [B, C] int32. Returns (v_flip [B] — var 0
+    (the dummy) for already-solved chains, new_val [B], key')."""
+    unsat = tc == 0                           # [B, C]
+    any_unsat = jnp.any(unsat, axis=-1)       # [B]
+    key, k1, k2 = jax.random.split(key, 3)
+    # pick a random unsat clause per chain
+    logits = jnp.where(unsat, 0.0, -1e30)
+    cidx = jax.random.categorical(k1, logits, axis=-1)      # [B]
+    vs = cvars[cidx]                          # [B, Lmax]
+    vmask = vs > 0
+    # break count per candidate var: clauses where v is the sole support
+    occ_c = ovars[vs]                         # [B, Lmax, Omax]
+    occ_s = osign[vs]
+    occ_valid = occ_c >= 0
+    occ_cc = jnp.where(occ_valid, occ_c, 0)
+    flat = occ_cc.reshape(occ_cc.shape[0], -1)              # [B, L*O]
+    tc_at = jnp.take_along_axis(tc, flat, axis=-1).reshape(occ_c.shape)
+    a_at = jnp.take_along_axis(assign, vs, axis=-1)         # [B, Lmax]
+    supports = occ_s == a_at[..., None]       # var currently satisfies c'
+    brk = jnp.sum(occ_valid & supports & (tc_at == 1), axis=-1)  # [B, Lmax]
+    # probSAT polynomial heuristic: p ∝ (1 + brk)^-cb
+    w = jnp.where(vmask, -cb * jnp.log1p(brk.astype(jnp.float32)), -1e30)
+    pick = jax.random.categorical(k2, w, axis=-1)           # [B]
+    v_flip = jnp.take_along_axis(vs, pick[:, None], axis=-1)[:, 0]
+    v_flip = jnp.where(any_unsat, v_flip, 0)  # flip dummy var 0 if solved
+    new_val = ~jnp.take_along_axis(assign, v_flip[:, None], axis=-1)[:, 0]
+    return v_flip, new_val, key
+
+
+def _apply_flip_one(ovars, osign, assign, tc, v_flip, new_val):
+    """Apply the flip + incremental true-count update via occurrence lists
+    (pure-jnp reference for the fused ``kernels/flip_update`` kernel)."""
+    assign = assign.at[jnp.arange(assign.shape[0]), v_flip].set(new_val)
+    occ_cf = ovars[v_flip]                    # [B, Omax]
+    occ_sf = osign[v_flip]
+    validf = occ_cf >= 0
+    delta = jnp.where(occ_sf == new_val[:, None], 1, -1)
+    delta = jnp.where(validf, delta, 0)
+    tc = tc + jnp.zeros_like(tc).at[
+        jnp.arange(tc.shape[0])[:, None], jnp.where(validf, occ_cf, 0)
+    ].add(delta)
+    return assign, tc
+
+
+def _window_chunk(cvars, csign, ovars, osign, assign, tc, keys, n_steps, cb,
+                  kernels: Optional[str]):
+    """Walk all K CNFs for ``n_steps`` probSAT steps (n_steps may be a
+    traced scalar — both engines share this one implementation, so they
+    consume the PRNG stream identically and stay bit-compatible).
+
+    assign: [K, B, V+1] bool; tc: [K, B, C] int32; keys: [K, 2].
+    """
+    del csign  # only the pick/update tensors are read here
+
+    def body(_, carry):
+        assign, tc, keys = carry
+        v_flip, new_val, keys = jax.vmap(
+            lambda cv, ov, os_, a, t, k:
+            _pick_flip_one(cv, ov, os_, a, t, k, cb)
+        )(cvars, ovars, osign, assign, tc, keys)
+        if kernels is not None:
+            from ...kernels.flip_update import flip_update
+            kk = jnp.arange(assign.shape[0])[:, None]
+            occ_c = ovars[kk, v_flip]          # [K, B, O]
+            occ_s = osign[kk, v_flip]
+            assign, tc = flip_update(
+                assign, tc, v_flip, occ_c, occ_s, new_val,
+                interpret=True if kernels == "interpret" else None)
+        else:
+            assign, tc = jax.vmap(_apply_flip_one)(
+                ovars, osign, assign, tc, v_flip, new_val)
+        return assign, tc, keys
+
+    return jax.lax.fori_loop(0, n_steps, body, (assign, tc, keys))
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 9))
 def _run_chains_window(cvars: jnp.ndarray, csign: jnp.ndarray,
                        ovars: jnp.ndarray, osign: jnp.ndarray,
                        n_vars: int, steps: int, cb: float,
                        assign0: jnp.ndarray, keys: jnp.ndarray,
+                       kernels: Optional[str] = None,
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """vmapped probSAT over a *window* of K CNFs (one per candidate II).
+    """One fixed-length chunk of probSAT over a *window* of K CNFs (the
+    host engine's unit of work; one jit entry per chunk length).
 
     cvars/csign: [K, C, Lmax]; ovars/osign: [K, V+1, Omax];
     assign0: [K, B, V+1]; keys: [K, 2]. Returns (solved [K, B], assign,
     per-clause true counts [K, B, C] — the near-miss signal).
     """
-    def one(cv, cs, ov, os_, a0, k):
-        packed = PackedCNF(cv, cs, ov, os_, n_vars, cv.shape[0])
-        return _chains_core(packed, a0, k, steps, cb)
-    return jax.vmap(one)(cvars, csign, ovars, osign, assign0, keys)
+    del n_vars
+    tc0 = _window_tc(cvars, csign, assign0, kernels)
+    assign, tc, _ = _window_chunk(cvars, csign, ovars, osign,
+                                  assign0, tc0, keys, steps, cb, kernels)
+    solved = ~jnp.any(tc == 0, axis=-1)
+    return solved, assign, tc
 
+
+# -------------------------------------------------------- chunk scheduling
 
 def _bucket(x: int, q: int) -> int:
     return ((x + q - 1) // q) * q
 
 
+def _chunk_plan(steps: int, n_clauses: int) -> Tuple[int, int]:
+    """(cap, first_chunk) of the progressive chunk schedule, shared by both
+    walksat entry points: the per-chunk step count is bounded by the caller
+    budget AND by formula size (stop/skip are only polled between chunks,
+    and a cancelled racer must drain fast — fewer steps for big formulas),
+    and the first chunk never exceeds the cap, so a small ``steps`` budget
+    is honoured instead of being rounded up to 256."""
+    cap = max(64, min(steps, 2048, 2_000_000 // max(n_clauses, 1)))
+    return cap, min(256, cap)
+
+
 def _next_chunk(prev: int, cap: int, remaining: int) -> int:
-    """Progressive chunk schedule: double from 256 up to ``cap``, then
-    shrink back down (powers of two only, so the handful of jit entries is
-    shared) to land on the step budget without overshooting by more than
-    one minimal chunk."""
+    """Progressive chunk schedule: double from the first chunk up to
+    ``cap``, then shrink back down (halving only, so the handful of jit
+    entries the host engine needs is shared) to land on the step budget
+    without overshooting by more than one minimal chunk."""
     c = min(prev * 2, cap)
     while c > 256 and c > remaining:
         c //= 2
+    return c
+
+
+def _next_chunk_jnp(prev, cap, remaining):
+    """Traced twin of :func:`_next_chunk` for the device engine's
+    while_loop (cap <= 2048, so 5 unrolled halvings always suffice)."""
+    c = jnp.minimum(prev * 2, cap)
+    for _ in range(5):
+        c = jnp.where((c > 256) & (c > remaining), c // 2, c)
     return c
 
 
@@ -179,11 +320,17 @@ def _init_assign(key: jnp.ndarray, batch: int, n_vars_padded: int,
     near-miss under the shared variable numbering): chain 0 starts from it
     exactly and chain b flips a growing fraction (up to half) of the
     variables, so the batch explores a widening neighbourhood of the hint
-    while keeping full random restarts in the tail."""
+    while keeping full random restarts in the tail.
+
+    The hint is truncated/padded defensively: a sweep window can *shrink*
+    (e.g. the previous window's II bucketed to a larger padded var count),
+    so ``init`` may be longer or shorter than this window's variable
+    space — extra entries are dropped, missing ones default to False."""
     if init is None:
         return jax.random.bernoulli(key, 0.5, (batch, n_vars_padded + 1))
     base = np.zeros(n_vars_padded + 1, bool)
-    base[1:len(init) + 1] = np.asarray(init, bool)[:n_vars_padded]
+    hint = np.asarray(init, bool)[:n_vars_padded]
+    base[1:len(hint) + 1] = hint
     ps = jnp.linspace(0.0, 0.5, batch)[:, None]
     flips = jax.random.bernoulli(key, ps, (batch, n_vars_padded + 1))
     return jnp.asarray(base)[None, :] ^ flips
@@ -231,11 +378,249 @@ def pack_cnf_window(cnfs: List[CNF]) -> PackedCNF:
                      jnp.asarray(ovars), jnp.asarray(osign), V, C)
 
 
+def _maybe_shard_window(packed: PackedCNF, assign0: jnp.ndarray,
+                        ) -> jnp.ndarray:
+    """Shard the (II-window x restart-batch) grid over the device mesh.
+
+    On multi-device hosts the restart batch is split across devices (each
+    device walks an independent slice of chains; the clause tensors are
+    small and replicated) and GSPMD propagates the layout through the
+    jitted engines — the per-candidate solved/near-miss reductions become
+    cross-device all-reduces. Single-device hosts (this CPU container)
+    pass through untouched, so the code path is identical everywhere."""
+    n_dev = jax.device_count()
+    if n_dev <= 1 or assign0.shape[1] % n_dev != 0:
+        return assign0
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.asarray(jax.devices()), ("dev",))
+    return jax.device_put(assign0, NamedSharding(mesh, P(None, "dev", None)))
+
+
+# ---------------------------------------------------------- device engine
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _device_segment(poll_chunks: int, cb: float, kernels: Optional[str],
+                    cvars, csign, ovars, osign, steps, cap, state):
+    """Run up to ``poll_chunks`` chunks of the progressive schedule wholly
+    on device, early-exiting when every live candidate has a solved chain.
+
+    ``state`` carries the full walk: (assign [K,B,V+1], tc [K,B,C], key,
+    done, chunk, solved [K], solved_assign [K,V+1] — the assignment of the
+    first chain observed solved, snapshotted in the chunk it solved so a
+    late poll returns the same model the per-chunk host engine would have,
+    skip [K], best_unsat [K], best_assign [K,V+1] — best-over-all-chunks
+    near-miss state, tracked only while a candidate is still pending).
+    Only ``solved``/``done`` need to reach the host between segments; the
+    big buffers stay device-resident for the next segment.
+    """
+    K = state[0].shape[0]
+
+    def cond(st):
+        _, _, _, done, _, solved, _, skip, _, _, polls = st
+        return ((done < steps) & jnp.any(~(solved | skip))
+                & (polls < poll_chunks))
+
+    def body(st):
+        (assign, tc, key, done, chunk, solved, solved_assign, skip,
+         best_unsat, best_assign, polls) = st
+        key, kc = jax.random.split(key)
+        keys = jax.random.split(kc, K)
+        assign, tc, _ = _window_chunk(cvars, csign, ovars, osign,
+                                      assign, tc, keys, chunk, cb, kernels)
+        chain_ok = ~jnp.any(tc == 0, axis=-1)           # [K, B]
+        cand_ok = jnp.any(chain_ok, axis=-1)            # [K]
+        fresh = cand_ok & ~solved
+        row = jnp.argmax(chain_ok, axis=-1)             # first solved chain
+        snap = assign[jnp.arange(K), row]
+        solved_assign = jnp.where(fresh[:, None], snap, solved_assign)
+        solved = solved | fresh
+        # near-miss: best assignment over all chunks, per still-pending
+        # candidate (solved/skipped candidates stop accumulating)
+        n_unsat = jnp.sum(tc == 0, axis=-1)             # [K, B]
+        bu = jnp.min(n_unsat, axis=-1)
+        brow = jnp.argmin(n_unsat, axis=-1)
+        improve = ~solved & ~skip & (bu < best_unsat)
+        best_unsat = jnp.where(improve, bu, best_unsat)
+        best_assign = jnp.where(improve[:, None],
+                                assign[jnp.arange(K), brow], best_assign)
+        done = done + chunk
+        chunk = _next_chunk_jnp(chunk, cap, steps - done)
+        return (assign, tc, key, done, chunk, solved, solved_assign, skip,
+                best_unsat, best_assign, polls + 1)
+
+    out = jax.lax.while_loop(cond, body, state + (jnp.int32(0),))
+    return out[:-1]
+
+
+def _solve_window_device(cnfs, live, packed, results, *, seed, steps, batch,
+                         cb, stop, should_skip, on_sat, inits, near_miss,
+                         on_near_miss):
+    from . import SAT
+    K = len(live)
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    init_keys = jax.random.split(k0, K)
+    assign0 = jnp.stack([
+        _init_assign(init_keys[j], batch, packed.n_vars,
+                     inits[live[j]] if inits is not None else None)
+        for j in range(K)])
+    assign0 = _maybe_shard_window(packed, assign0)
+    kernels = _sat_kernels_mode()
+    cap, chunk0 = _chunk_plan(steps, packed.n_clauses)
+    tc0 = _window_tc(packed.cvars, packed.csign, assign0, kernels)
+    v1 = packed.n_vars + 1
+    state = (assign0, tc0, key,
+             jnp.int32(0), jnp.int32(chunk0),
+             jnp.zeros(K, bool), jnp.zeros((K, v1), bool),
+             jnp.zeros(K, bool),
+             jnp.full(K, _INT32_MAX, jnp.int32), jnp.zeros((K, v1), bool))
+    skip_host = np.zeros(K, bool)
+    pending = set(range(K))
+    nm_emitted = np.full(K, _INT32_MAX, np.int64)   # last streamed quality
+    done = 0
+    while done < steps and pending:
+        if stop is not None and stop():
+            break
+        if should_skip is not None:
+            newly = [j for j in sorted(pending) if should_skip(live[j])]
+            if newly:
+                for j in newly:
+                    pending.discard(j)
+                    skip_host[j] = True
+                if not pending:
+                    break
+                state = state[:7] + (jnp.asarray(skip_host),) + state[8:]
+        state = _device_segment(_POLL_CHUNKS, cb, kernels,
+                                packed.cvars, packed.csign,
+                                packed.ovars, packed.osign,
+                                jnp.int32(steps), jnp.int32(cap), state)
+        # the host blocks only on the tiny status pair; the walk state
+        # (assignments, true counts, near-miss buffers) stays on device
+        solved_dev, done_dev = jax.block_until_ready((state[5], state[3]))
+        solved_np = np.asarray(solved_dev)
+        done = int(done_dev)
+        for j in sorted(pending):
+            if not solved_np[j]:
+                continue
+            i = live[j]
+            model = [bool(b) for b in
+                     np.asarray(state[6][j])[1:cnfs[i].n_vars + 1]]
+            _validate_model(cnfs[i], model, f"device engine, candidate {i}")
+            results[i] = (SAT, model)
+            pending.discard(j)
+            if on_sat is not None:
+                on_sat(i, model)
+        if on_near_miss is not None and pending:
+            # stream near-miss improvements at each poll — the caller's
+            # feedback channel (e.g. CDCL phase hints) sees them while
+            # the walk is still running, not only at budget exhaustion
+            bu = np.asarray(state[8])
+            for j in sorted(pending):
+                if bu[j] < nm_emitted[j]:
+                    nm_emitted[j] = bu[j]
+                    i = live[j]
+                    on_near_miss(
+                        i, int(bu[j]),
+                        [bool(b) for b in
+                         np.asarray(state[9][j])[1:cnfs[i].n_vars + 1]])
+    if near_miss is not None and pending:
+        bu = np.asarray(state[8])
+        ba = np.asarray(state[9])
+        for j in sorted(pending):
+            if bu[j] >= _INT32_MAX:
+                continue
+            i = live[j]
+            near_miss[i] = (int(bu[j]),
+                            [bool(b) for b in ba[j][1:cnfs[i].n_vars + 1]])
+    return results
+
+
+# ------------------------------------------------------------ host engine
+
+def _solve_window_host(cnfs, live, packed, results, *, seed, steps, batch,
+                       cb, stop, should_skip, on_sat, inits, near_miss,
+                       on_near_miss):
+    """The per-chunk host loop (PR 1/2 reference engine): identical chunk
+    schedule, PRNG stream, and near-miss bookkeeping as the device engine,
+    with flags polled after every chunk."""
+    from . import SAT
+    K = len(live)
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    init_keys = jax.random.split(k0, K)
+    assign0 = jnp.stack([
+        _init_assign(init_keys[j], batch, packed.n_vars,
+                     inits[live[j]] if inits is not None else None)
+        for j in range(K)])
+    assign0 = _maybe_shard_window(packed, assign0)
+    kernels = _sat_kernels_mode()
+    cap, chunk = _chunk_plan(steps, packed.n_clauses)
+    done = 0
+    pending = set(range(K))
+    # best-over-all-chunks near-miss per candidate (not final-chunk-only)
+    nm_best = {j: (_INT32_MAX, None) for j in range(K)}
+    while done < steps and pending:
+        if stop is not None and stop():
+            break
+        key, kc = jax.random.split(key)
+        keys = jax.random.split(kc, K)
+        solved, assign, tc = _run_chains_window(
+            packed.cvars, packed.csign, packed.ovars, packed.osign,
+            packed.n_vars, chunk, cb, assign0, keys, kernels)
+        solved_np = np.asarray(solved)
+        for j in sorted(pending):
+            i = live[j]
+            if should_skip is not None and should_skip(i):
+                pending.discard(j)
+                continue
+            if not solved_np[j].any():
+                continue
+            row = int(np.argmax(solved_np[j]))
+            model = [bool(b) for b in
+                     np.asarray(assign[j, row])[1:cnfs[i].n_vars + 1]]
+            _validate_model(cnfs[i], model, f"host engine, candidate {i}")
+            results[i] = (SAT, model)
+            pending.discard(j)
+            if on_sat is not None:
+                on_sat(i, model)
+        if (near_miss is not None or on_near_miss is not None) and pending:
+            n_unsat = np.asarray(jnp.sum(tc == 0, axis=-1))   # [K, B]
+            assign_np = None
+            for j in sorted(pending):
+                row = int(np.argmin(n_unsat[j]))
+                if int(n_unsat[j, row]) < nm_best[j][0]:
+                    if assign_np is None:
+                        assign_np = np.asarray(assign)
+                    nm_best[j] = (int(n_unsat[j, row]),
+                                  assign_np[j, row].copy())
+                    if on_near_miss is not None:
+                        i = live[j]
+                        on_near_miss(
+                            i, nm_best[j][0],
+                            [bool(b) for b in
+                             nm_best[j][1][1:cnfs[i].n_vars + 1]])
+        assign0 = assign
+        done += chunk
+        chunk = _next_chunk(chunk, cap, steps - done)
+    if near_miss is not None:
+        for j in sorted(pending):
+            nu, arr = nm_best[j]
+            if arr is None:
+                continue
+            i = live[j]
+            near_miss[i] = (nu, [bool(b) for b in arr[1:cnfs[i].n_vars + 1]])
+    return results
+
+
+# -------------------------------------------------------------- front door
+
 def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
                          steps: int = 8192, batch: int = 24, cb: float = 2.3,
                          stop=None, should_skip=None, on_sat=None,
                          inits: Optional[List[Optional[List[bool]]]] = None,
                          near_miss: Optional[dict] = None,
+                         on_near_miss=None,
+                         engine: Optional[str] = None,
                          ) -> List[Tuple[str, Optional[List[bool]]]]:
     """Batched probSAT across a window of candidate-II CNFs.
 
@@ -251,9 +636,20 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
 
     ``inits[i]`` warm-starts candidate i's chains from a prior assignment
     (see ``_init_assign``); ``near_miss``, when given a dict, receives
-    ``{i: (n_unsat, assignment)}`` — the best assignment each unsolved
-    candidate reached, which the incremental ``SolverSession`` feeds to the
-    next window as the warm start.
+    ``{i: (n_unsat, assignment)}`` — the best assignment each *still
+    pending* candidate reached over the whole walk (solved and skipped
+    candidates are excluded, so the session's warm-start dict is never
+    polluted with stale or irrelevant assignments). ``on_near_miss(i,
+    n_unsat, assignment)`` streams improvements *during* the walk (per
+    host poll on the device engine, per chunk on the host engine) — the
+    asynchronous feedback channel the solver portfolio uses to seed CDCL
+    phase hints while the racer is still walking.
+
+    ``engine`` selects the chunk driver: ``"device"`` (default) keeps the
+    whole schedule in one jitted while_loop with the host polling a tiny
+    status array every few chunks; ``"host"`` is the per-chunk reference
+    loop. Both are bit-compatible for a fixed seed;
+    ``REPRO_WALKSAT_ENGINE`` overrides the default.
     """
     from . import SAT, UNKNOWN, UNSAT
     K = len(cnfs)
@@ -271,108 +667,33 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
             live.append(i)
     if not live:
         return results
+    if engine is None:
+        engine = os.environ.get("REPRO_WALKSAT_ENGINE", "device")
+    if engine not in ("device", "host"):
+        raise ValueError(f"unknown walksat engine {engine!r}")
     packed = pack_cnf_window([cnfs[i] for i in live])
-    key = jax.random.PRNGKey(seed)
-    key, k0 = jax.random.split(key)
-    init_keys = jax.random.split(k0, len(live))
-    assign0 = jnp.stack([
-        _init_assign(init_keys[j], batch, packed.n_vars,
-                     inits[live[j]] if inits is not None else None)
-        for j in range(len(live))])
-    # bound wall-time per chunk (stop/skip are only polled between chunks,
-    # and a cancelled racer must drain fast): fewer steps for big formulas.
-    # Chunks start small and double so easy SAT instances exit after a few
-    # hundred steps instead of paying the full cap; chunk sizes are powers
-    # of two, so the handful of jit entries is shared across windows.
-    cap = max(64, min(steps, 2048, 2_000_000 // max(packed.n_clauses, 1)))
-    chunk = min(256, cap)
-    done = 0
-    pending = set(range(len(live)))
-    tc = None
-    while done < steps and pending:
-        if stop is not None and stop():
-            break
-        key, kc = jax.random.split(key)
-        keys = jax.random.split(kc, len(live))
-        solved, assign, tc = _run_chains_window(
-            packed.cvars, packed.csign, packed.ovars, packed.osign,
-            packed.n_vars, chunk, cb, assign0, keys)
-        solved_np = np.asarray(solved)
-        for j in sorted(pending):
-            i = live[j]
-            if should_skip is not None and should_skip(i):
-                pending.discard(j)
-                continue
-            if not solved_np[j].any():
-                continue
-            row = int(np.argmax(solved_np[j]))
-            model = [bool(b) for b in
-                     np.asarray(assign[j, row])[1:cnfs[i].n_vars + 1]]
-            assert cnfs[i].check(model), "walksat returned a non-model"
-            results[i] = (SAT, model)
-            pending.discard(j)
-            if on_sat is not None:
-                on_sat(i, model)
-        assign0 = assign
-        done += chunk
-        chunk = _next_chunk(chunk, cap, steps - done)
-    if near_miss is not None and tc is not None:
-        n_unsat = np.asarray(jnp.sum(tc == 0, axis=-1))      # [K_live, B]
-        assign_np = np.asarray(assign0)
-        for j in range(len(live)):
-            i = live[j]
-            row = int(np.argmin(n_unsat[j]))
-            near_miss[i] = (int(n_unsat[j, row]),
-                            [bool(b) for b in
-                             assign_np[j, row][1:cnfs[i].n_vars + 1]])
-    return results
+    run = _solve_window_device if engine == "device" else _solve_window_host
+    return run(cnfs, live, packed, results, seed=seed, steps=steps,
+               batch=batch, cb=cb, stop=stop, should_skip=should_skip,
+               on_sat=on_sat, inits=inits, near_miss=near_miss,
+               on_near_miss=on_near_miss)
 
 
 def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
                   batch: int = 64, cb: float = 2.3, stop=None,
                   init: Optional[List[bool]] = None,
                   near_miss: Optional[dict] = None,
+                  engine: Optional[str] = None,
                   ) -> Tuple[str, Optional[List[bool]]]:
-    from . import SAT, UNKNOWN, UNSAT
-    if getattr(cnf, "trivially_unsat", False) or \
-            any(len(c) == 0 for c in cnf.clauses):
-        return UNSAT, None
-    if cnf.n_clauses == 0 or cnf.n_vars == 0:
-        return SAT, [False] * cnf.n_vars
-    # bucketed padded pack (the K=1 window): consecutive IIs of a sweep —
-    # and the incremental projections, whose handful of selector variables
-    # would otherwise change the tensor shapes — reuse one XLA compile
-    w = pack_cnf_window([cnf])
-    packed = PackedCNF(w.cvars[0], w.csign[0], w.ovars[0], w.osign[0],
-                       w.n_vars, w.n_clauses)
-    key = jax.random.PRNGKey(seed)
-    key, k0 = jax.random.split(key)
-    assign0 = _init_assign(k0, batch, packed.n_vars, init)
-    # chunk the walk so we can stop early once a chain solves; chunks
-    # start small and double (powers of two share jit cache entries), so
-    # easy instances return after a few hundred steps
-    cap = max(256, min(steps, 2048))
-    chunk = min(256, cap)
-    done = 0
-    tc = None
-    while done < steps:
-        if stop is not None and stop():
-            return UNKNOWN, None
-        key, kc = jax.random.split(key)
-        solved, assign, tc = _run_chains(packed, assign0, kc, chunk, cb)
-        solved = np.asarray(solved)
-        if solved.any():
-            row = int(np.argmax(solved))
-            model = np.asarray(assign[row])[1:cnf.n_vars + 1].tolist()
-            assert cnf.check(model), "walksat returned a non-model"
-            return SAT, [bool(b) for b in model]
-        assign0 = assign
-        done += chunk
-        chunk = _next_chunk(chunk, cap, steps - done)
-    if near_miss is not None and tc is not None:
-        n_unsat = np.asarray(jnp.sum(tc == 0, axis=-1))
-        row = int(np.argmin(n_unsat))
-        near_miss[0] = (int(n_unsat[row]),
-                        [bool(b) for b in
-                         np.asarray(assign0[row])[1:cnf.n_vars + 1]])
-    return UNKNOWN, None
+    """Single-CNF probSAT: the K=1 window. Shares the window engines, the
+    bucketed padded pack (consecutive IIs of a sweep — and the incremental
+    projections, whose handful of selector variables would otherwise change
+    the tensor shapes — reuse one XLA compile), and the budget/formula-size
+    chunk schedule, so a caller-provided ``steps`` is honoured exactly the
+    same way in both entry points. ``near_miss`` receives ``{0: (n_unsat,
+    assignment)}`` when the instance stays unsolved."""
+    res = solve_walksat_window(
+        [cnf], seed=seed, steps=steps, batch=batch, cb=cb, stop=stop,
+        inits=[init] if init is not None else None,
+        near_miss=near_miss, engine=engine)
+    return res[0]

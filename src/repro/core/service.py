@@ -117,6 +117,8 @@ class RequestStats:
     iis_pruned: int = 0            # IIs skipped via failed-assumption cores
     clauses_evicted: int = 0       # learnt clauses evicted during this request
     learned_retained: int = 0      # learnt DB size after the request
+    near_misses: int = 0           # racer near-misses banked as warm state
+    phase_hints: int = 0           # CDCL solves seeded from that warm state
     request_time: float = 0.0
 
 
@@ -129,14 +131,16 @@ class ServiceStats:
     sessions_reused: int = 0
     iis_pruned: int = 0
     clauses_evicted: int = 0
+    near_misses: int = 0
+    phase_hints: int = 0
     cache_evictions: int = 0
     session_evictions: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         return {k: getattr(self, k) for k in (
             "requests", "cache_hits", "sessions_created", "sessions_reused",
-            "iis_pruned", "clauses_evicted", "cache_evictions",
-            "session_evictions")}
+            "iis_pruned", "clauses_evicted", "near_misses", "phase_hints",
+            "cache_evictions", "session_evictions")}
 
 
 @dataclass
@@ -245,6 +249,8 @@ class MappingService:
                 entry.requests += 1
                 pruned0 = sess.pruned_total
                 evicted0 = sess.clauses_evicted
+                nm0 = sess.near_miss_updates
+                ph0 = sess.phase_hints_served
                 res = map_loop(dfg, cgra, cfg, sweep_width=sweep_width,
                                session=sess)
                 res.service = RequestStats(
@@ -253,10 +259,14 @@ class MappingService:
                     iis_pruned=sess.pruned_total - pruned0,
                     clauses_evicted=sess.clauses_evicted - evicted0,
                     learned_retained=sess.learnt_db_size,
+                    near_misses=sess.near_miss_updates - nm0,
+                    phase_hints=sess.phase_hints_served - ph0,
                     request_time=time.time() - t0)
             with self._lock:
                 self.stats.iis_pruned += res.service.iis_pruned
                 self.stats.clauses_evicted += res.service.clauses_evicted
+                self.stats.near_misses += res.service.near_misses
+                self.stats.phase_hints += res.service.phase_hints
 
         if not res.timed_out:
             # a timed-out verdict reflects this request's budget, not the

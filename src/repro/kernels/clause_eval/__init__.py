@@ -1,1 +1,1 @@
-from .ops import true_counts  # noqa: F401
+from .ops import resolve_interpret, true_counts, true_counts_window  # noqa: F401

@@ -1,11 +1,13 @@
-"""Pallas TPU kernel: batched clause true-count evaluation.
+"""Pallas kernel: batched clause true-count evaluation.
 
-TPU adaptation of the WalkSAT inner loop: the whole assignment vector for a
-block of chains lives in VMEM (V bits is tiny — a 100k-var instance is
-100KB as int8), the clause-literal table streams through VMEM in [block_c,
-Lmax] tiles, and each grid cell evaluates a [block_b x block_c] tile of the
-(chain, clause) matrix with a vectorized gather. Grid dims are fully
-parallel — clause tiles are independent.
+Accelerator adaptation of the WalkSAT inner loop: the whole assignment
+vector for a block of chains lives in VMEM/shared memory (V bits is tiny —
+a 100k-var instance is 100KB as int8), the clause-literal table streams
+through in [block_c, Lmax] tiles, and each grid cell evaluates a
+[block_b x block_c] tile of the (chain, clause) matrix with a vectorized
+gather. Grid dims are fully parallel — clause tiles are independent. The
+same kernel body lowers via Mosaic on TPU and Triton on GPU; the window
+variant adds a leading CNF grid axis for the II-sweep's stacked formulas.
 """
 from __future__ import annotations
 
@@ -48,5 +50,44 @@ def clause_eval_pallas(assign: jnp.ndarray, cvars: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        interpret=interpret,
+    )(assign, cvars, csign)
+
+
+def _clause_eval_window_kernel(assign_ref, cvars_ref, csign_ref, out_ref):
+    a = assign_ref[0]                        # [bB, V+1] int8
+    cv = cvars_ref[0]                        # [bC, L] int32
+    cs = csign_ref[0]                        # [bC, L] int8
+    bb = a.shape[0]
+    bc, ll = cv.shape
+    flat = cv.reshape(-1)
+    vals = jnp.take(a, flat, axis=1).reshape(bb, bc, ll)
+    sat = (vals == cs[None]) & (cv[None] > 0)
+    out_ref[0] = jnp.sum(sat, axis=-1, dtype=jnp.int32)
+
+
+def clause_eval_window_pallas(assign: jnp.ndarray, cvars: jnp.ndarray,
+                              csign: jnp.ndarray, *, block_b: int = 8,
+                              block_c: int = 1024, interpret: bool = False,
+                              ) -> jnp.ndarray:
+    """Window variant for the II sweep's stacked formulas: assign
+    [K, B, V+1] int8; cvars/csign [K, C, L]. Returns tc [K, B, C] int32.
+    The CNF axis K is a leading (fully parallel) grid dimension — each grid
+    cell sees one formula's clause tile against one batch tile of its
+    chains. B % block_b == 0 and C % block_c == 0 (ops pads)."""
+    k, b, v1 = assign.shape
+    _, c, l = cvars.shape
+    grid = (k, b // block_b, c // block_c)
+    return pl.pallas_call(
+        _clause_eval_window_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, v1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_c, l), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_c, l), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, block_c),
+                               lambda g, i, j: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, b, c), jnp.int32),
         interpret=interpret,
     )(assign, cvars, csign)

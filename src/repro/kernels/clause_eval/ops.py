@@ -1,17 +1,38 @@
-"""jit'd public wrapper: padding + backend dispatch for clause_eval."""
+"""jit'd public wrappers: padding + backend dispatch for clause_eval."""
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import clause_eval_pallas
-from .ref import true_counts_ref
+from .kernel import clause_eval_pallas, clause_eval_window_pallas
+from .ref import true_counts_ref, true_counts_window_ref
 
 
 def _pad_to(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Interpret-vs-compiled policy shared by the SAT kernels.
+
+    Compiled by default on TPU (Mosaic) *and* GPU (Triton); interpret mode
+    — same kernel body, Python evaluation — everywhere else, since Pallas
+    has no CPU lowering. ``REPRO_PALLAS_INTERPRET=1/0`` overrides (CI uses
+    it to force interpret-mode coverage on CPU runners and compiled mode
+    where an accelerator is present); an explicit ``interpret=`` argument
+    wins over everything.
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "on"):
+        return True
+    if env in ("0", "false", "off"):
+        return False
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_c",
@@ -22,11 +43,10 @@ def true_counts(cvars: jnp.ndarray, csign: jnp.ndarray, assign: jnp.ndarray,
     """Batched per-clause true counts. cvars [C,L] int32 (0-padded, 1-based);
     csign [C,L] bool; assign [B,V+1] bool -> [B,C] int32.
 
-    On non-TPU backends the kernel runs in interpret mode (same code path,
-    Python evaluation) unless ``interpret=False`` forces compilation.
+    Compiled on TPU/GPU, interpret mode elsewhere (see
+    :func:`resolve_interpret`); ``interpret=False`` forces compilation.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     b, v1 = assign.shape
     c, l = cvars.shape
     bp = _pad_to(max(b, 1), block_b)
@@ -39,4 +59,28 @@ def true_counts(cvars: jnp.ndarray, csign: jnp.ndarray, assign: jnp.ndarray,
     return tc[:b, :c]
 
 
-__all__ = ["true_counts", "true_counts_ref"]
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c",
+                                             "interpret"))
+def true_counts_window(cvars: jnp.ndarray, csign: jnp.ndarray,
+                       assign: jnp.ndarray, *, block_b: int = 8,
+                       block_c: int = 1024,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Window variant: cvars [K,C,L] int32; csign [K,C,L] bool; assign
+    [K,B,V+1] bool -> [K,B,C] int32. The sweep's padded window tensors are
+    already bucketed, but arbitrary shapes are padded here too so the tests
+    can drive odd sizes."""
+    interpret = resolve_interpret(interpret)
+    k, b, v1 = assign.shape
+    _, c, l = cvars.shape
+    bp = _pad_to(max(b, 1), block_b)
+    cp = _pad_to(max(c, 1), block_c)
+    a8 = jnp.pad(assign.astype(jnp.int8), ((0, 0), (0, bp - b), (0, 0)))
+    cv = jnp.pad(cvars, ((0, 0), (0, cp - c), (0, 0)))
+    cs = jnp.pad(csign.astype(jnp.int8), ((0, 0), (0, cp - c), (0, 0)))
+    tc = clause_eval_window_pallas(a8, cv, cs, block_b=block_b,
+                                   block_c=block_c, interpret=interpret)
+    return tc[:, :b, :c]
+
+
+__all__ = ["true_counts", "true_counts_window", "true_counts_ref",
+           "true_counts_window_ref", "resolve_interpret"]

@@ -18,3 +18,11 @@ def true_counts_ref(cvars: jnp.ndarray, csign: jnp.ndarray,
     vals = assign[:, cvars]                            # [B, C, L]
     sat = jnp.where(mask[None], vals == csign[None], False)
     return jnp.sum(sat, axis=-1).astype(jnp.int32)
+
+
+def true_counts_window_ref(cvars: jnp.ndarray, csign: jnp.ndarray,
+                           assign: jnp.ndarray) -> jnp.ndarray:
+    """Window oracle: cvars/csign [K, C, L]; assign [K, B, V+1] bool.
+    Returns [K, B, C] int32 — one formula per leading index."""
+    import jax
+    return jax.vmap(true_counts_ref)(cvars, csign, assign)

@@ -1,0 +1,1 @@
+from .ops import flip_update  # noqa: F401

@@ -1,0 +1,54 @@
+"""jit'd public wrapper: padding + backend dispatch for flip_update."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..clause_eval.ops import resolve_interpret
+from .kernel import flip_update_pallas
+from .ref import flip_update_ref
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c",
+                                             "interpret"))
+def flip_update(assign: jnp.ndarray, tc: jnp.ndarray, v_flip: jnp.ndarray,
+                occ_c: jnp.ndarray, occ_s: jnp.ndarray,
+                new_val: jnp.ndarray, *, block_b: int = 8,
+                block_c: int = 256, interpret: bool | None = None,
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused flip + incremental true-count update over an II window.
+
+    assign [K,B,V+1] bool; tc [K,B,C] int32; v_flip [K,B] int32 (0 = the
+    dummy no-op var); occ_c [K,B,O] int32 clause ids of the flipped var
+    (-1 = padding); occ_s [K,B,O] bool literal signs; new_val [K,B] bool.
+    Returns (assign' bool, tc' int32). Compiled on TPU/GPU, interpret mode
+    elsewhere (same policy as clause_eval).
+    """
+    interpret = resolve_interpret(interpret)
+    k, b, v1 = assign.shape
+    c = tc.shape[2]
+    bp = _pad_to(max(b, 1), block_b)
+    cp = _pad_to(max(c, 1), block_c)
+    a8 = jnp.pad(assign.astype(jnp.int8), ((0, 0), (0, bp - b), (0, 0)))
+    tcp = jnp.pad(tc, ((0, 0), (0, bp - b), (0, cp - c)))
+    vf = jnp.pad(v_flip.astype(jnp.int32),
+                 ((0, 0), (0, bp - b)))[..., None]
+    # padded chain rows get occ_c == -1 so they touch no clause
+    occ = jnp.pad(occ_c.astype(jnp.int32), ((0, 0), (0, bp - b), (0, 0)),
+                  constant_values=-1)
+    osn = jnp.pad(occ_s.astype(jnp.int8), ((0, 0), (0, bp - b), (0, 0)))
+    nv = jnp.pad(new_val.astype(jnp.int8),
+                 ((0, 0), (0, bp - b)))[..., None]
+    a_out, tc_out = flip_update_pallas(a8, tcp, vf, occ, osn, nv,
+                                       block_b=block_b, block_c=block_c,
+                                       interpret=interpret)
+    return a_out[:, :b].astype(bool), tc_out[:, :b, :c]
+
+
+__all__ = ["flip_update", "flip_update_ref"]

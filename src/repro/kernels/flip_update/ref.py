@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused flip + incremental true-count update.
+
+Given one probSAT flip per chain (variable id, its new value, and the
+pre-gathered occurrence row of that variable), apply the flip to the
+assignment and bump the true count of every clause the variable occurs in:
++1 where the new value satisfies the literal, -1 where it un-satisfies it.
+Integer-exact by construction — the walksat engines assert the carried
+counts equal a fresh recount, so kernel and oracle must agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flip_update_ref(assign: jnp.ndarray, tc: jnp.ndarray,
+                    v_flip: jnp.ndarray, occ_c: jnp.ndarray,
+                    occ_s: jnp.ndarray, new_val: jnp.ndarray,
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """assign [K,B,V+1] bool; tc [K,B,C] int32; v_flip [K,B] int32
+    (0 = dummy no-op var); occ_c [K,B,O] int32 clause ids (-1 = padding);
+    occ_s [K,B,O] bool; new_val [K,B] bool. Returns (assign', tc')."""
+
+    def one(a, t, vf, oc, os_, nv):
+        a = a.at[jnp.arange(a.shape[0]), vf].set(nv)
+        valid = oc >= 0
+        delta = jnp.where(os_ == nv[:, None], 1, -1)
+        delta = jnp.where(valid, delta, 0)
+        t = t + jnp.zeros_like(t).at[
+            jnp.arange(t.shape[0])[:, None], jnp.where(valid, oc, 0)
+        ].add(delta)
+        return a, t
+
+    return jax.vmap(one)(assign, tc, v_flip, occ_c, occ_s, new_val)

@@ -1,0 +1,79 @@
+"""`python -O` smoke of the mapper suite — catches assert-stripping bugs.
+
+Under -O every bare ``assert`` vanishes, so any correctness guard that
+matters must be a real raise. This script exercises the mapper end to end
+(sequential + sweep), the walksat engines, and the structured non-model
+guard, using explicit checks only (this file itself must work under -O,
+so it cannot use ``assert`` either).
+
+Run:  PYTHONPATH=src python -O tests/optimized_smoke.py
+"""
+import sys
+
+
+def check(ok: bool, what: str) -> None:
+    if not ok:
+        print(f"FAIL: {what}")
+        sys.exit(1)
+    print(f"ok: {what}")
+
+
+def main() -> None:
+    check(not __debug__, "running under python -O (asserts stripped)")
+
+    from repro.core import suite
+    from repro.core.cgra import CGRA
+    from repro.core.cnf import CNF
+    from repro.core.dfg import running_example
+    from repro.core.encode import EncoderSession
+    from repro.core.mapper import MapperConfig, map_loop
+    from repro.core.sat import SAT
+    from repro.core.sat.walksat_jax import (NonModelError,
+                                            solve_walksat_window)
+    from repro.core.simulator import verify_mapping
+
+    # mapper end to end, sequential and sweep, on the paper's example
+    cfg = MapperConfig(solver="auto", timeout_s=90)
+    seq = map_loop(running_example(), CGRA(2, 2), cfg)
+    check(seq.success and seq.ii == 3, "sequential maps running example")
+    swp = map_loop(running_example(), CGRA(2, 2), cfg, sweep_width=3)
+    check(swp.success and swp.ii == seq.ii, "sweep agrees with sequential")
+    chk = verify_mapping(swp.dfg, CGRA(2, 2), swp.placement, swp.ii,
+                         n_iters=6)
+    check(chk.ok, "sweep mapping verifies in the simulator")
+
+    # one real suite kernel through both walksat engines
+    g = suite.get("srand")
+    sess = EncoderSession(g, CGRA(3, 3))
+    cnfs = [sess.encode(ii).cnf for ii in (4, 5)]
+    rh = solve_walksat_window(cnfs, seed=5, steps=800, batch=4,
+                              engine="host")
+    rd = solve_walksat_window(cnfs, seed=5, steps=800, batch=4,
+                              engine="device")
+    check(rh == rd, "host and device engines agree under -O")
+    check(any(s == SAT for s, _ in rd), "walksat certifies a suite cell")
+
+    # the non-model guard must SURVIVE -O: it used to be a bare assert,
+    # which -O silently stripped — a miscompiled kernel could then return
+    # a non-model as SAT
+    class LyingCNF(CNF):
+        def check(self, assignment):
+            return False
+
+    lying = LyingCNF()
+    for _ in range(cnfs[0].n_vars):
+        lying.new_var()
+    for cl in cnfs[0].clauses:
+        lying.add_clause(list(cl))
+    try:
+        solve_walksat_window([lying], seed=5, steps=800, batch=4)
+    except NonModelError:
+        check(True, "non-model guard raises under -O")
+    else:
+        check(False, "non-model guard raises under -O")
+
+    print("optimized smoke OK")
+
+
+if __name__ == "__main__":
+    main()

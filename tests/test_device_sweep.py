@@ -1,0 +1,289 @@
+"""Device-resident probSAT sweep engine: host/device bit-compatibility,
+warm-start padding regressions, near-miss semantics, chunk scheduling,
+and the non-model structured-error guard."""
+import numpy as np
+import pytest
+
+from repro.core import suite
+from repro.core.cgra import CGRA
+from repro.core.cnf import CNF
+from repro.core.dfg import running_example
+from repro.core.encode import EncoderSession
+from repro.core.sat import SAT, UNKNOWN
+from repro.core.sat.walksat_jax import (NonModelError, _chunk_plan,
+                                        _next_chunk, solve_walksat,
+                                        solve_walksat_window)
+from repro.core.schedule import min_ii
+
+
+def _window_cnfs(name: str, cgra: CGRA, width: int = 3):
+    g = suite.get(name)
+    mii = max(min_ii(g, cgra), 1)
+    sess = EncoderSession(g, cgra)
+    iis = list(range(mii, mii + width))
+    return iis, [sess.encode(ii).cnf for ii in iis]
+
+
+def _tiny_cnf(n_vars: int = 6, seed: int = 0) -> CNF:
+    """A small random satisfiable-ish 3-CNF for unit-level checks."""
+    rng = np.random.RandomState(seed)
+    cnf = CNF()
+    for _ in range(n_vars):
+        cnf.new_var()
+    model = rng.rand(n_vars) > 0.5
+    for _ in range(3 * n_vars):
+        vs = rng.choice(n_vars, 3, replace=False) + 1
+        lits = [int(v) if rng.rand() > 0.5 else -int(v) for v in vs]
+        # force at least one literal to agree with `model` => SAT
+        v0 = int(vs[0])
+        lits[0] = v0 if model[v0 - 1] else -v0
+        cnf.add_clause(lits)
+    return cnf
+
+
+# -------------------------------------------------- engine bit-compatibility
+@pytest.mark.parametrize("name", suite.names())
+def test_device_engine_matches_host_engine_3x3(name):
+    """Fixed-seed determinism across drive styles: the device-resident
+    while_loop engine must return the same statuses AND the same models as
+    the per-chunk host reference loop on every suite kernel's II window."""
+    _, cnfs = _window_cnfs(name, CGRA(3, 3))
+    nm_h, nm_d = {}, {}
+    rh = solve_walksat_window(cnfs, seed=11, steps=1200, batch=6,
+                              engine="host", near_miss=nm_h)
+    rd = solve_walksat_window(cnfs, seed=11, steps=1200, batch=6,
+                              engine="device", near_miss=nm_d)
+    assert rh == rd
+    assert nm_h == nm_d
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("size", ["2x2", "4x4"])
+@pytest.mark.parametrize("name", suite.names())
+def test_device_engine_matches_host_engine_all_sizes(name, size):
+    """The remaining cells of the 11-kernel x {2x2, 3x3, 4x4} suite grid
+    (3x3 runs in tier-1 above)."""
+    r, c = int(size[0]), int(size[2])
+    _, cnfs = _window_cnfs(name, CGRA(r, c))
+    rh = solve_walksat_window(cnfs, seed=11, steps=800, batch=4,
+                              engine="host")
+    rd = solve_walksat_window(cnfs, seed=11, steps=800, batch=4,
+                              engine="device")
+    assert rh == rd
+
+
+def test_device_engine_is_deterministic():
+    _, cnfs = _window_cnfs("sha", CGRA(3, 3))
+    r1 = solve_walksat_window(cnfs, seed=4, steps=900, batch=6,
+                              engine="device")
+    r2 = solve_walksat_window(cnfs, seed=4, steps=900, batch=6,
+                              engine="device")
+    assert r1 == r2
+
+
+def test_engine_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_WALKSAT_ENGINE", "host")
+    _, cnfs = _window_cnfs("srand", CGRA(3, 3))
+    assert solve_walksat_window(cnfs, seed=1, steps=400, batch=4) == \
+        solve_walksat_window(cnfs, seed=1, steps=400, batch=4,
+                             engine="host")
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        solve_walksat_window([_tiny_cnf()], engine="gpu-magic")
+
+
+def test_solve_walksat_is_the_k1_window():
+    """The single-CNF entry point must be byte-equivalent to a K=1 window
+    (shared pack, chunk schedule, and PRNG stream)."""
+    cnf = _window_cnfs("gsm", CGRA(3, 3))[1][0]
+    assert solve_walksat(cnf, seed=9, steps=700, batch=4) == \
+        solve_walksat_window([cnf], seed=9, steps=700, batch=4)[0]
+
+
+# ------------------------------------------------------ warm-start regression
+def test_warm_start_longer_than_window_does_not_crash():
+    """Regression: a warm-start hint from a previous, *larger* window
+    (more padded vars) used to crash _init_assign with a NumPy shape
+    mismatch. The hint must be truncated defensively."""
+    cnf = _tiny_cnf(8)
+    init = [True] * 100000          # way beyond any padded var count
+    status, model = solve_walksat(cnf, seed=0, steps=400, batch=4,
+                                  init=init)
+    assert status == SAT and cnf.check(model)
+
+
+def test_warm_start_shrinking_window_across_iis():
+    """End-to-end shrinking-window shape change: warm-start assignments
+    recorded against a big kernel's padded var space must be usable as
+    inits for a much smaller formula's window."""
+    _, big = _window_cnfs("sha", CGRA(3, 3))          # thousands of vars
+    nm: dict = {}
+    solve_walksat_window([big[0]], seed=0, steps=300, batch=4,
+                         near_miss=nm)
+    assert 0 in nm                                     # II=MII is hard
+    carried = nm[0][1]
+    small = _tiny_cnf(5)
+    assert len(carried) > small.n_vars
+    res = solve_walksat_window([small], seed=0, steps=400, batch=4,
+                               inits=[carried])
+    assert res[0][0] == SAT and small.check(res[0][1])
+
+
+def test_warm_start_shorter_init_is_padded():
+    cnf = _window_cnfs("nw", CGRA(3, 3))[1][0]
+    status, model = solve_walksat(cnf, seed=2, steps=800, batch=6,
+                                  init=[True, False, True])
+    if status == SAT:
+        assert cnf.check(model)
+
+
+# ------------------------------------------------------- near-miss semantics
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_near_miss_excludes_solved_and_skipped(engine):
+    """Only still-pending candidates may emit near-misses: solved ones
+    have a model (a near-miss would be stale), skipped ones are no longer
+    interesting (their assignment would pollute the warm-start dict)."""
+    iis, cnfs = _window_cnfs("sha", CGRA(3, 3))
+    near: dict = {}
+    res = solve_walksat_window(
+        cnfs, seed=3, steps=1500, batch=8, engine=engine,
+        should_skip=lambda i: i == 2,      # candidate 2 abandoned
+        near_miss=near)
+    assert 2 not in near
+    for i, (status, _) in enumerate(res):
+        if status == SAT:
+            assert i not in near
+    for i, (nu, assign) in near.items():
+        assert nu > 0
+        assert res[i][0] == UNKNOWN
+        # consistency: the reported quality matches a recount
+        n_unsat = sum(
+            1 for cl in cnfs[i].clauses
+            if not any((lit > 0) == assign[abs(lit) - 1] for lit in cl))
+        assert n_unsat == nu
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_near_miss_streams_improvements(engine):
+    """on_near_miss must fire while the walk runs, monotonically
+    improving per candidate, and agree with the final near_miss dict."""
+    _, cnfs = _window_cnfs("sha", CGRA(3, 3))
+    seen: dict = {}
+    final: dict = {}
+
+    def on_nm(i, nu, assign):
+        assert i not in seen or nu < seen[i]
+        seen[i] = nu
+
+    res = solve_walksat_window(cnfs[:1], seed=3, steps=1500, batch=6,
+                               engine=engine, near_miss=final,
+                               on_near_miss=on_nm)
+    if res[0][0] == UNKNOWN:
+        assert 0 in seen and 0 in final
+        assert seen[0] == final[0][0]
+
+
+# --------------------------------------------------------- chunk scheduling
+def test_chunk_plan_honours_small_budgets():
+    """Regression: solve_walksat used to run at least 256 steps even for
+    steps=64. The shared plan must never exceed the caller's budget on
+    the first chunk."""
+    cap, chunk0 = _chunk_plan(64, 100)
+    assert cap == 64 and chunk0 == 64
+    cap, chunk0 = _chunk_plan(8192, 100)
+    assert cap == 2048 and chunk0 == 256
+
+
+def test_chunk_plan_bounds_by_formula_size():
+    """Big formulas get smaller chunks so stop()/skip polling stays
+    responsive (both entry points now share this bound)."""
+    cap_small, _ = _chunk_plan(20000, 1000)
+    cap_big, _ = _chunk_plan(20000, 20000)
+    assert cap_big < cap_small
+    assert cap_big == max(64, 2_000_000 // 20000)
+
+
+def test_chunk_schedule_lands_on_budget():
+    for steps in (64, 100, 256, 1000, 4096, 20000):
+        cap, chunk = _chunk_plan(steps, 500)
+        done = 0
+        while done < steps:
+            done += chunk
+            chunk = _next_chunk(chunk, cap, steps - done)
+        # the shrink-to-land schedule overshoots by less than the minimal
+        # chunk (the halving floor), never by a whole max-size chunk
+        assert done >= steps
+        assert done - steps < 256
+
+
+def test_small_step_budget_is_respected_end_to_end():
+    """steps=1 on a hard instance must return fast as UNKNOWN — the old
+    max(256, ...) floor walked 256x the requested budget."""
+    _, cnfs = _window_cnfs("sha", CGRA(3, 3))
+    status, _ = solve_walksat(cnfs[0], seed=0, steps=1, batch=2)
+    assert status == UNKNOWN
+
+
+# ------------------------------------------------------- non-model guard
+class _LyingCNF(CNF):
+    """A CNF whose check() always fails — stands in for a miscompiled
+    kernel / packer bug making the device claim SAT on a non-model."""
+
+    def check(self, assignment):
+        return False
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_non_model_raises_structured_error(engine):
+    lying = _LyingCNF()
+    src = _tiny_cnf(6)
+    for _ in range(src.n_vars):
+        lying.new_var()
+    for cl in src.clauses:
+        lying.add_clause(list(cl))
+    with pytest.raises(NonModelError):
+        solve_walksat_window([lying], seed=0, steps=2000, batch=8,
+                             engine=engine)
+
+
+def test_non_model_guard_is_not_an_assert():
+    """The guard must survive `python -O` (it used to be a bare assert):
+    NonModelError is a real exception type raised by _validate_model."""
+    from repro.core.sat.walksat_jax import _validate_model
+    assert issubclass(NonModelError, RuntimeError)
+    with pytest.raises(NonModelError):
+        _validate_model(_LyingCNF(), [], "unit")
+
+
+# --------------------------------------------------- phase-hint feedback
+def test_session_phase_hint_roundtrip():
+    from repro.core.sat.portfolio import SolverSession
+    g = running_example()
+    sess = SolverSession(EncoderSession(g, CGRA(2, 2)), method="cdcl")
+    assert sess.phase_hint() is None
+    sess.update_best([True] * 10, 3)
+    hint = sess.phase_hint()
+    assert hint is not None and sess.phase_hints_served == 1
+    assert sess.near_miss_updates == 1
+    # a worse near-miss must not replace the banked one
+    sess.update_best([False] * 10, 7)
+    assert sess.near_miss_updates == 1
+    # a full model always wins and is not a near-miss
+    sess.update_best([False] * 10, 0)
+    assert sess.near_miss_updates == 1 and sess.best_quality == 0
+
+
+def test_sweep_with_phase_hints_still_equals_sequential():
+    """The async near-miss -> phase-hint feedback must not change the
+    sweep's II verdict (hinted models that fail regalloc are provisional
+    and retried unhinted)."""
+    from repro.core.mapper import MapperConfig, map_loop
+    g = suite.get("sha")
+    cgra = CGRA(3, 3)
+    cfg = MapperConfig(solver="auto", timeout_s=90)
+    seq = map_loop(g, cgra, cfg)
+    swp = map_loop(suite.get("sha"), cgra, cfg, sweep_width=3)
+    assert swp.ii == seq.ii
+    assert any(a.phase_hinted is not None for a in swp.attempts)

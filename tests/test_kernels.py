@@ -4,8 +4,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.clause_eval import true_counts
-from repro.kernels.clause_eval.ref import true_counts_ref
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # container has no hypothesis
+    from _propshim import given, settings, strategies as st
+
+from repro.kernels.clause_eval import true_counts, true_counts_window
+from repro.kernels.clause_eval.ref import (true_counts_ref,
+                                           true_counts_window_ref)
+from repro.kernels.flip_update import flip_update
+from repro.kernels.flip_update.ref import flip_update_ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan import ssd_scan
@@ -38,6 +46,131 @@ def test_clause_eval_on_real_instance():
     got = true_counts(packed.cvars, packed.csign.astype(bool), assign)
     want = true_counts_ref(packed.cvars, packed.csign.astype(bool), assign)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------- clause_eval window + flip_update
+_COMPILED = jax.default_backend() in ("tpu", "gpu")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(2, 4),
+       st.integers(2, 40), st.integers(1, 9), st.integers(0, 10_000))
+def test_clause_eval_window_matches_ref_property(k, c, l, v, b, seed):
+    """The window kernel (interpret) is bit-identical to the jnp oracle
+    across arbitrary (K, C, L, V, B) shapes — including the padding the
+    ops wrapper adds to reach the block grid."""
+    rng = np.random.RandomState(seed)
+    cvars = jnp.asarray(rng.randint(0, v + 1, (k, c, l)), jnp.int32)
+    csign = jnp.asarray(rng.rand(k, c, l) > 0.5)
+    assign = jnp.asarray(rng.rand(k, b, v + 1) > 0.5)
+    got = true_counts_window(cvars, csign, assign, interpret=True)
+    want = true_counts_window_ref(cvars, csign, assign)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_eval_window_on_real_packed_window():
+    """Bucketed padded shapes from the real packer, tautology-padded
+    clause rows included: the kernel must count the (v1 or not v1) padding
+    rows as exactly one true literal like the oracle does."""
+    from repro.core.cgra import CGRA
+    from repro.core.dfg import running_example
+    from repro.core.encode import EncoderSession
+    from repro.core.sat.walksat_jax import pack_cnf_window
+    sess = EncoderSession(running_example(), CGRA(2, 2))
+    cnfs = [sess.encode(ii).cnf for ii in (2, 3, 4)]
+    p = pack_cnf_window(cnfs)
+    # every window has tautology padding (clause counts differ across IIs)
+    assert any(c.n_clauses < p.n_clauses for c in cnfs)
+    rng = np.random.RandomState(1)
+    assign = jnp.asarray(rng.rand(3, 4, p.n_vars + 1) > 0.5)
+    got = true_counts_window(p.cvars, p.csign.astype(bool), assign)
+    want = true_counts_window_ref(p.cvars, p.csign.astype(bool), assign)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # padded rows are tautologies: exactly one true literal, never unsat
+    for i, cnf in enumerate(cnfs):
+        pad = np.asarray(got)[i, :, cnf.n_clauses:]
+        np.testing.assert_array_equal(pad, 1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 9), st.integers(2, 30),
+       st.integers(1, 12), st.integers(1, 6), st.integers(0, 10_000))
+def test_flip_update_matches_ref_property(k, b, v, c, o, seed):
+    """The fused flip+tc-update kernel (interpret) is bit-identical to
+    the occurrence-list oracle, including -1 occ padding and the dummy
+    var-0 no-op flip of already-solved chains."""
+    rng = np.random.RandomState(seed)
+    assign = jnp.asarray(rng.rand(k, b, v + 1) > 0.5)
+    tc = jnp.asarray(rng.randint(0, 4, (k, b, c)), jnp.int32)
+    v_flip = jnp.asarray(rng.randint(0, v + 1, (k, b)), jnp.int32)
+    occ_c = jnp.asarray(
+        np.where(rng.rand(k, b, o) < 0.3, -1, rng.randint(0, c, (k, b, o))),
+        jnp.int32)
+    occ_s = jnp.asarray(rng.rand(k, b, o) > 0.5)
+    new_val = jnp.asarray(rng.rand(k, b) > 0.5)
+    ga, gt = flip_update(assign, tc, v_flip, occ_c, occ_s, new_val,
+                         interpret=True)
+    wa, wt = flip_update_ref(assign, tc, v_flip, occ_c, occ_s, new_val)
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+    np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+
+
+def test_flip_update_keeps_true_counts_consistent():
+    """Walking a real packed window with flip_update must keep the carried
+    incremental counts equal to a fresh recount — the invariant both
+    walksat engines rely on for the solved flag."""
+    from repro.core.cgra import CGRA
+    from repro.core.dfg import running_example
+    from repro.core.encode import EncoderSession
+    from repro.core.sat.walksat_jax import pack_cnf_window
+    sess = EncoderSession(running_example(), CGRA(2, 2))
+    p = pack_cnf_window([sess.encode(ii).cnf for ii in (3, 4)])
+    rng = np.random.RandomState(7)
+    K, B = 2, 4
+    assign = jnp.asarray(rng.rand(K, B, p.n_vars + 1) > 0.5)
+    tc = true_counts_window_ref(p.cvars, p.csign.astype(bool), assign)
+    kk = jnp.arange(K)[:, None]
+    for step in range(5):
+        v_flip = jnp.asarray(rng.randint(0, p.n_vars + 1, (K, B)), jnp.int32)
+        # a flip always *negates* the current value (the incremental
+        # update's contract; probSAT never "re-sets" a var to itself)
+        new_val = ~jnp.take_along_axis(assign, v_flip[..., None],
+                                       axis=-1)[..., 0]
+        occ_c = p.ovars[kk, v_flip]
+        occ_s = p.osign[kk, v_flip]
+        assign, tc = flip_update(assign, tc, v_flip, occ_c, occ_s, new_val)
+        recount = true_counts_window_ref(p.cvars, p.csign.astype(bool),
+                                         assign)
+        np.testing.assert_array_equal(np.asarray(tc), np.asarray(recount))
+
+
+@pytest.mark.skipif(not _COMPILED,
+                    reason="Pallas compiled mode needs TPU/GPU; interpret "
+                           "mode is covered on CPU")
+def test_kernels_compiled_match_interpret():
+    """On real accelerators the compiled lowering (Mosaic/Triton) must be
+    bit-identical to interpret mode for both SAT kernels."""
+    rng = np.random.RandomState(0)
+    k, c, l, v, b, o = 2, 37, 3, 50, 8, 4
+    cvars = jnp.asarray(rng.randint(0, v + 1, (k, c, l)), jnp.int32)
+    csign = jnp.asarray(rng.rand(k, c, l) > 0.5)
+    assign = jnp.asarray(rng.rand(k, b, v + 1) > 0.5)
+    np.testing.assert_array_equal(
+        np.asarray(true_counts_window(cvars, csign, assign,
+                                      interpret=False)),
+        np.asarray(true_counts_window(cvars, csign, assign,
+                                      interpret=True)))
+    tc = jnp.asarray(rng.randint(0, 4, (k, b, c)), jnp.int32)
+    v_flip = jnp.asarray(rng.randint(0, v + 1, (k, b)), jnp.int32)
+    occ_c = jnp.asarray(rng.randint(-1, c, (k, b, o)), jnp.int32)
+    occ_s = jnp.asarray(rng.rand(k, b, o) > 0.5)
+    new_val = jnp.asarray(rng.rand(k, b) > 0.5)
+    got = flip_update(assign, tc, v_flip, occ_c, occ_s, new_val,
+                      interpret=False)
+    want = flip_update(assign, tc, v_flip, occ_c, occ_s, new_val,
+                       interpret=True)
+    for a, b_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
 
 
 # -------------------------------------------------------- flash attention
