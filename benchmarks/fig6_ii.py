@@ -217,6 +217,110 @@ def walksat_engine_bench(names=None, size: str = "3x3", steps: int = 4000,
     return out
 
 
+def _legacy_pack(cnf) -> tuple:
+    """The PR 6 per-clause dense pack (pre-arena), pinned here as the
+    microbenchmark baseline and identity oracle for the vectorised
+    ``pack_cnf_np``: same padded clause matrix and occurrence lists, built
+    one Python append at a time."""
+    import numpy as np
+    lmax = max((len(c) for c in cnf.clauses), default=1)
+    C = cnf.n_clauses
+    cvars = np.zeros((C, lmax), np.int32)
+    csign = np.zeros((C, lmax), bool)
+    occ = [[] for _ in range(cnf.n_vars + 1)]
+    for ci, cl in enumerate(cnf.clauses):
+        for j, lit in enumerate(cl):
+            v = abs(lit)
+            cvars[ci, j] = v
+            csign[ci, j] = lit > 0
+            occ[v].append((ci, lit > 0))
+    omax = max((len(o) for o in occ), default=1)
+    ovars = np.full((cnf.n_vars + 1, omax), -1, np.int32)
+    osign = np.zeros((cnf.n_vars + 1, omax), bool)
+    for v, lst in enumerate(occ):
+        for j, (ci, s) in enumerate(lst):
+            ovars[v, j] = ci
+            osign[v, j] = s
+    return cvars, csign, ovars, osign, cnf.n_vars, C
+
+
+def encode_pack_bench(names=None, size: str = "4x4",
+                      n_iis: int = 3, repeats: int = 3) -> Dict[str, Dict]:
+    """Encode+pack microbenchmark: the pinned legacy per-clause emitters
+    (``emitters="legacy"`` — the pre-arena loop generators kept as the
+    test oracle) plus the pinned per-clause pack, vs the vectorised arena
+    emitters plus the zero-copy arena pack, per kernel on ``size`` over
+    the II window [MII, MII + n_iis).
+
+    Every cell also *verifies* bit-identical clause streams and identical
+    pack tensors between the two paths (``streams_match``/``packs_match``
+    — --check asserts them), so the speedup is never measured against a
+    divergent formula. Timings are best-of-``repeats`` of the per-II
+    emit(+pack) work with the session layout prebuilt outside the loop:
+    the layout/C1 build is one shared implementation (not forked by
+    emitter mode), and a sweep pays it once while paying the per-II
+    families at every candidate II.
+    """
+    import numpy as np
+    from repro.core.encode import EncoderSession
+    from repro.core.sat.walksat_jax import pack_cnf_np
+    from repro.core.schedule import min_ii
+    out: Dict[str, Dict] = {}
+    cgra = cgra_from_name(size)
+    for name in names or suite.names():
+        g = suite.get(name)
+        mii = max(min_ii(g, cgra), 1)
+        iis = list(range(mii, mii + n_iis))
+        # identity gate: legacy and vector paths must agree bit-for-bit
+        sl = EncoderSession(g, cgra, emitters="legacy")
+        sv = EncoderSession(g, cgra, emitters="vector")
+        streams_match = packs_match = True
+        for ii in iis:
+            cl_, cv_ = sl.encode(ii).cnf, sv.encode(ii).cnf
+            if not (cl_.n_vars == cv_.n_vars and cl_.clauses == cv_.clauses):
+                streams_match = False
+                continue
+            ref, got = _legacy_pack(cv_), pack_cnf_np(cv_)
+            if not all(np.array_equal(a, b) for a, b in zip(ref, got)):
+                packs_match = False
+
+        # sessions (and their shared layout/C1 build — code identical in
+        # both modes) are prebuilt: the timed region is exactly the per-II
+        # family emitters and the per-CNF pack, i.e. the work a sweep pays
+        # per candidate II
+        def pipeline(mode: str, with_pack: bool) -> float:
+            s = EncoderSession(g, cgra, emitters=mode)
+            s._ensure_layout()
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                cnfs = [s.encode(ii).cnf for ii in iis]
+                if with_pack:
+                    pack = _legacy_pack if mode == "legacy" else pack_cnf_np
+                    for c in cnfs:
+                        pack(c)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        def encode_only(mode: str) -> float:
+            return pipeline(mode, with_pack=False)
+
+        e_leg, e_vec = encode_only("legacy"), encode_only("vector")
+        t_leg, t_vec = pipeline("legacy", True), pipeline("vector", True)
+        out[f"{name}/{size}"] = {
+            "iis": iis,
+            "encode_legacy_s": round(e_leg, 5),
+            "encode_vector_s": round(e_vec, 5),
+            "total_legacy_s": round(t_leg, 5),
+            "total_vector_s": round(t_vec, 5),
+            "encode_speedup": round(e_leg / max(e_vec, 1e-9), 2),
+            "total_speedup": round(t_leg / max(t_vec, 1e-9), 2),
+            "streams_match": streams_match,
+            "packs_match": packs_match,
+        }
+    return out
+
+
 def summarize(results: Dict) -> Dict:
     """The paper's headline stats over all cells, plus sweep-vs-sequential
     equivalence and wall-clock comparison (aggregated per kernel)."""
@@ -311,12 +415,33 @@ def summarize(results: Dict) -> Dict:
 
 def main(quick: bool = False, amo: str = "pairwise",
          check: bool = False, sizes=None,
-         bench_out: str = "BENCH_sweep.json") -> None:
+         bench_out: str = "BENCH_sweep.json",
+         encode_bench_out: str = "BENCH_encode.json") -> None:
     names = ["sha", "gsm", "srand", "bitcount", "nw"] if quick else None
     print("AMO clause counts (pairwise vs Sinz sequential, at MII on 4x4):")
     for name, counts in amo_clause_report(names).items():
         print(f"  {name:10s} pairwise={counts['pairwise']:6d} "
               f"sequential={counts['sequential']:6d}")
+    epb = encode_pack_bench(names)
+    print("encode+pack (pinned legacy emitters/pack vs vectorised arena):")
+    for k, v in epb.items():
+        print(f"  {k:16s} encode {v['encode_legacy_s']:7.4f}s ->"
+              f" {v['encode_vector_s']:7.4f}s ({v['encode_speedup']:5.2f}x)"
+              f"  +pack {v['total_legacy_s']:7.4f}s ->"
+              f" {v['total_vector_s']:7.4f}s ({v['total_speedup']:5.2f}x)"
+              f"  identical={v['streams_match'] and v['packs_match']}")
+    # the encode-throughput trajectory artefact, next to BENCH_sweep.json
+    agg_e = (sum(v["encode_legacy_s"] for v in epb.values())
+             / max(sum(v["encode_vector_s"] for v in epb.values()), 1e-9))
+    agg_t = (sum(v["total_legacy_s"] for v in epb.values())
+             / max(sum(v["total_vector_s"] for v in epb.values()), 1e-9))
+    with open(encode_bench_out, "w") as f:
+        json.dump({"quick": quick, "cells": epb,
+                   "aggregate_encode_speedup": round(agg_e, 2),
+                   "aggregate_encode_pack_speedup": round(agg_t, 2)},
+                  f, indent=1, sort_keys=True)
+    print(f"wrote {encode_bench_out} (aggregate encode {agg_e:.2f}x, "
+          f"encode+pack {agg_t:.2f}x)")
     engines = walksat_engine_bench(
         names, steps=2000 if quick else 4000, batch=8 if quick else 12)
     print("walksat engines (seq per-CNF vs host window vs device-resident):")
@@ -373,6 +498,14 @@ def main(quick: bool = False, amo: str = "pairwise",
         if disagree:
             bad.append("walksat host/device engines disagree on "
                        f"{disagree}")
+        stream_bad = [k for k, v in epb.items()
+                      if not (v["streams_match"] and v["packs_match"])]
+        if stream_bad:
+            bad.append("vectorised emitters/pack diverge from the pinned "
+                       f"legacy path on {stream_bad}")
+        if agg_e < 1.5:
+            bad.append(f"aggregate encode speedup {agg_e:.2f}x < 1.5x "
+                       "vs the pinned legacy emitters")
         if bad:
             raise SystemExit("fig6 --check failed: " + "; ".join(bad))
         print("fig6 --check OK")
@@ -383,10 +516,14 @@ if __name__ == "__main__":
     amo = "sequential" if "--amo=sequential" in sys.argv else "pairwise"
     sizes = None
     bench_out = "BENCH_sweep.json"
+    encode_bench_out = "BENCH_encode.json"
     for a in sys.argv[1:]:
         if a.startswith("--sizes="):
             sizes = [s for s in a[len("--sizes="):].split(",") if s]
         elif a.startswith("--bench-out="):
             bench_out = a[len("--bench-out="):]
+        elif a.startswith("--encode-bench-out="):
+            encode_bench_out = a[len("--encode-bench-out="):]
     main(quick="--quick" in sys.argv, amo=amo,
-         check="--check" in sys.argv, sizes=sizes, bench_out=bench_out)
+         check="--check" in sys.argv, sizes=sizes, bench_out=bench_out,
+         encode_bench_out=encode_bench_out)

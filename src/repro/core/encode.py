@@ -29,14 +29,27 @@ Clause families:
       here: for every destination literal w,  (¬w ∨ compatible-src-lits...).
       Delivery mode (internal vs. output register, Eq. 4 vs. 5) is resolved
       post-SAT by register allocation, which models both.
+
+Emitter modes: the per-II families above exist twice. The default
+``emitters="vector"`` path computes each family as one flat numpy block —
+exploiting that a node's variables are laid out contiguously as
+``var(n, t, p_idx) = base(n) + (t - asap(n)) * P(n) + p_idx + 1`` — and
+extends the clause arena with a handful of array ops per family.
+``emitters="legacy"`` keeps the original per-clause Python generators
+(`c2_fold_groups` / `c2w_clauses` / `c3_clauses` + ``add_clause`` loops);
+it is the pinned baseline for the encode microbenchmark and the oracle the
+property tests compare against — the two modes are asserted bit-identical
+(same clause order, same literal order) on the whole suite.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .cgra import CGRA
-from .cnf import CNF, IncrementalCNF
+from .cnf import CNF, ClauseArena, IncrementalCNF
 from .dfg import DFG
 from .schedule import KMS, asap_alap, build_kms, node_latencies
 
@@ -49,15 +62,103 @@ class Lit:
     iteration: int
 
 
-@dataclass
+# (iu, ju) index pairs of np.triu_indices(k, 1), memoised per k: the pair
+# enumeration (0,1),(0,2),...,(1,2),... is exactly the nested i<j loop order
+_TRIU_CACHE: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+
+def _triu(k: int) -> Tuple[np.ndarray, np.ndarray]:
+    got = _TRIU_CACHE.get(k)
+    if got is None:
+        got = np.triu_indices(k, 1)
+        _TRIU_CACHE[k] = got
+    return got
+
+
+def _neg_pairs(u: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Interleave (¬u, ¬w) rows into one flat binary-clause block."""
+    flat = np.empty(u.size * 2, dtype=np.int64)
+    flat[0::2] = -u
+    flat[1::2] = -w
+    return flat
+
+
+def _concat(flats: List[np.ndarray], lens: List[np.ndarray],
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    if not flats:
+        return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+    return np.concatenate(flats), np.concatenate(lens)
+
+
+class _C3Rows(NamedTuple):
+    """Row-major (edge, td, pd) constants for the batched C3 emitter —
+    see EncoderSession._c3_rows."""
+    td: np.ndarray        # consumer flat time of the row's head literal
+    a_s: np.ndarray       # producer ASAP / ALAP window
+    b_s: np.ndarray
+    lo0: np.ndarray       # window bounds: lo = lo0 - hi1*II,
+    hi0: np.ndarray       #                hi = hi0 + (1-hi1)*II
+    hi1: np.ndarray       # (hi1 == edge distance delta)
+    head: np.ndarray      # head var (positive; emitted negated)
+    npsel: np.ndarray     # |reachable src PEs| for the row's dst PE
+    selstart: np.ndarray  # row's slice start into sel
+    const: np.ndarray     # src var = const + ts*p_s + sel[...]
+    p_s: np.ndarray
+    sel: np.ndarray       # ragged concat of per-(edge, dst-PE) src-PE indices
+
+
 class Encoding:
-    cnf: CNF
-    kms: KMS
-    cgra: CGRA
-    dfg: DFG
-    var_of: Dict[Tuple[int, int, int, int], int]   # (n,p,c,it) -> var
-    info: Dict[int, Lit]                           # var -> literal info
-    stats: Dict[str, int] = field(default_factory=dict)
+    """Result of one (cold) per-II encode.
+
+    ``var_of`` / ``info`` — the per-II (n,p,c,it) <-> var dictionaries —
+    are derived lazily from the session layout: the solver path never
+    touches them (decode does, once, after SAT), so the hot encode path
+    skips building two O(vars) dicts.
+    """
+
+    def __init__(self, cnf: CNF, kms: Optional[KMS], cgra: CGRA, dfg: DFG,
+                 var_of: Optional[Dict[Tuple[int, int, int, int], int]] = None,
+                 info: Optional[Dict[int, Lit]] = None,
+                 stats: Optional[Dict[str, int]] = None,
+                 layout: Optional["_Layout"] = None,
+                 ii: Optional[int] = None,
+                 lat: Optional[Dict[int, int]] = None):
+        self.cnf = cnf
+        self.cgra = cgra
+        self.dfg = dfg
+        self.stats: Dict[str, int] = stats or {}
+        self._kms = kms
+        self._var_of = var_of
+        self._info = info
+        self._lay = layout
+        self._ii = ii
+        self._lat = lat
+
+    @property
+    def kms(self) -> KMS:
+        """The II's kernel mobility schedule — lazy, like var_of/info: only
+        decode/diagnostics read it, never the solve path."""
+        if self._kms is None:
+            self._kms = build_kms(self.dfg, self._ii, lat=self._lat)
+        return self._kms
+
+    @property
+    def var_of(self) -> Dict[Tuple[int, int, int, int], int]:
+        """(n,p,c,it) -> var."""
+        if self._var_of is None:
+            ii = self._ii
+            self._var_of = {(n, p, t % ii, t // ii): v
+                            for (n, p, t), v in self._lay.var_of_t.items()}
+        return self._var_of
+
+    @property
+    def info(self) -> Dict[int, Lit]:
+        """var -> literal info."""
+        if self._info is None:
+            ii = self._ii
+            self._info = {v + 1: Lit(n, p, t % ii, t // ii)
+                          for v, (n, p, t) in enumerate(self._lay.info_t)}
+        return self._info
 
     def decode(self, model: Sequence[bool]) -> Dict[int, Tuple[int, int, int]]:
         """model[v-1] -> placement {node: (pe, cycle, iteration)}."""
@@ -81,18 +182,32 @@ class _Layout:
     [asap, alap]}`` — the underlying *flat times* t do not depend on II, so
     one variable per (node, PE, flat time) covers every candidate II with
     identical numbering. C1 (exactly-one per node) ranges over exactly those
-    variables and is therefore II-independent too; it is built once here and
-    its clause tuples are shared (not copied) into every per-II CNF. C2's
-    skeleton — which variables share a (PE, flat-time) slot — is also fixed;
-    only the fold ``t % II`` that merges slots changes per II.
+    variables and is therefore II-independent too; it is built once here
+    into its own clause arena and copied (one memcpy) into every per-II
+    CNF. C2's skeleton — which variables share a (PE, flat-time) slot — is
+    also fixed; only the fold ``t % II`` that merges slots changes per II.
+
+    A node's variables are contiguous and t-major: ``var(n, t, p_idx) =
+    base0[n] + (t - asap[n]) * npes[n] + p_idx + 1``. The vectorised
+    emitters lean on that closed form to compute whole clause families
+    without touching the dicts.
     """
     var_of_t: Dict[Tuple[int, int, int], int]      # (node, pe, t) -> var
     info_t: List[Tuple[int, int, int]]             # var-1 -> (node, pe, t)
     by_pt: Dict[Tuple[int, int], List[int]]        # (pe, t) -> vars
     pt_keys: List[Tuple[int, int]]                 # insertion-ordered keys
-    c1_clauses: List[Tuple[int, ...]]
+    c1_arena: ClauseArena                          # C1 clauses, CSR form
+    c1_trivial: bool                               # C1 contains an empty clause
     n_vars: int                                    # layout vars + C1 aux
     n_c1: int
+    base0: Dict[int, int]                          # node -> #vars before it
+    npes: Dict[int, int]                           # node -> |allowed PEs|
+    pt_blocks: List[np.ndarray]                    # by_pt values as int32 arrays
+    pt_index: Dict[Tuple[int, int], int]           # key -> index into pt_blocks
+    v_pe: np.ndarray                               # var-1 -> PE id
+    v_t: np.ndarray                                # var-1 -> flat time
+    v_lat: np.ndarray                              # var-1 -> node latency
+    mixed_lat: bool                                # any two node latencies differ
 
 
 class EncoderSession:
@@ -106,18 +221,28 @@ class EncoderSession:
         per (node, allowed PE, flat mobility time), created in a fixed
         order), so models/phase hints are comparable across IIs;
       * ``encode(ii)`` never mutates shared state — each call returns a
-        fresh ``Encoding`` whose CNF shares the C1 clause *tuples* but owns
-        its clause list, so concurrent solvers may consume them freely;
+        fresh ``Encoding`` whose CNF starts from a copy of the shared C1
+        arena, so concurrent solvers may consume them freely;
       * with the "sequential" (Sinz) AMO, C1 auxiliary variables live in the
         shared prefix and C2 auxiliaries are allocated per II *after* it, so
         the shared numbering is still stable.
+
+    ``emitters`` selects the per-II clause emitters: ``"vector"`` (default)
+    computes each family as flat numpy blocks, ``"legacy"`` runs the
+    original per-clause generator loops. Both produce bit-identical clause
+    streams (property-tested); legacy is kept as the pinned benchmark
+    baseline and test oracle.
     """
 
-    def __init__(self, dfg: DFG, cgra: CGRA, amo: str = "pairwise"):
+    def __init__(self, dfg: DFG, cgra: CGRA, amo: str = "pairwise",
+                 emitters: str = "vector"):
         dfg.validate()
+        if emitters not in ("vector", "legacy"):
+            raise ValueError(f"unknown emitters mode {emitters!r}")
         self.dfg = dfg
         self.cgra = cgra          # a CGRA or a heterogeneous ArchSpec
         self.amo = amo
+        self.emitters = emitters
         # per-node issue->result latencies from the fabric's op-class
         # latency table (all 1 on the paper's fabric): they stretch the
         # ASAP/ALAP windows and shift every C3 dependency window below
@@ -141,6 +266,9 @@ class EncoderSession:
             for pd in range(cgra.n_pes)
         ]
         self._layout: Optional[_Layout] = None
+        # II-independent per-clause-row constants for the batched C3
+        # emitter (built lazily by _c3_rows)
+        self._c3_row_cache: Optional[_C3Rows] = None
 
     # --------------------------------------------------- II-independent part
     def _ensure_layout(self) -> _Layout:
@@ -152,19 +280,35 @@ class EncoderSession:
         info_t: List[Tuple[int, int, int]] = []
         by_node: Dict[int, List[int]] = {}
         by_pt: Dict[Tuple[int, int], List[int]] = {}
+        base0: Dict[int, int] = {}
+        npes: Dict[int, int] = {}
+        v_pe_parts: List[np.ndarray] = []
+        v_t_parts: List[np.ndarray] = []
+        v_lat_parts: List[np.ndarray] = []
         # one var per (node, allowed PE, flat mobility time); creation order
         # (node, then time, then PE) matches the historical per-II encoder,
         # because KMS candidates enumerate the same flat times in order.
         for nid in dfg.nodes:
+            a, b = self.asap[nid], self.alap[nid]
+            pes = self.allowed_pes[nid]
+            base0[nid] = base.n_vars
+            npes[nid] = len(pes)
             lits = []
-            for t in range(self.asap[nid], self.alap[nid] + 1):
-                for p in self.allowed_pes[nid]:
+            for t in range(a, b + 1):
+                for p in pes:
                     v = base.new_var()
                     var_of_t[(nid, p, t)] = v
                     info_t.append((nid, p, t))
                     lits.append(v)
                     by_pt.setdefault((p, t), []).append(v)
             by_node[nid] = lits
+            if pes:
+                nt = b - a + 1
+                v_pe_parts.append(np.tile(np.asarray(pes, np.int64), nt))
+                v_t_parts.append(
+                    np.repeat(np.arange(a, b + 1, dtype=np.int64), len(pes)))
+                v_lat_parts.append(
+                    np.full(nt * len(pes), self.lat[nid], dtype=np.int64))
         # C1: exactly one position per node (Eq. 1) — II-independent
         for nid, lits in by_node.items():
             if not lits:
@@ -172,17 +316,28 @@ class EncoderSession:
                 base.add_clause([])
                 continue
             base.exactly_one(lits, self.amo)
+        empty = np.zeros(0, dtype=np.int64)
         self._layout = _Layout(
             var_of_t=var_of_t, info_t=info_t, by_pt=by_pt,
-            pt_keys=list(by_pt), c1_clauses=base.clauses,
-            n_vars=base.n_vars, n_c1=base.n_clauses)
+            pt_keys=list(by_pt), c1_arena=base.arena,
+            c1_trivial=base.trivially_unsat,
+            n_vars=base.n_vars, n_c1=base.n_clauses,
+            base0=base0, npes=npes,
+            pt_blocks=[np.asarray(v, dtype=np.int64)
+                       for v in by_pt.values()],
+            pt_index={k: i for i, k in enumerate(by_pt)},
+            v_pe=np.concatenate(v_pe_parts) if v_pe_parts else empty,
+            v_t=np.concatenate(v_t_parts) if v_t_parts else empty,
+            v_lat=np.concatenate(v_lat_parts) if v_lat_parts else empty,
+            mixed_lat=len(set(self.lat.values())) > 1)
         return self._layout
 
     # ------------------------------------------- per-II clause generators
     # Single source of truth for the II-dependent clause families: both
     # the cold per-II encoder (encode) and the layered incremental one
-    # (IncrementalEncoding.ensure_ii) consume these, so cold/incremental
-    # equivalence is structural, not maintained by hand in two loops.
+    # (IncrementalEncoding.ensure_ii) consume these. The legacy per-clause
+    # generators below are the pinned oracle; the _*_flat methods are the
+    # vectorised emitters asserted bit-identical to them.
     def c2_fold_groups(self, ii: int) -> List[List[Tuple[int, int]]]:
         """Groups of (PE, flat-time) slot keys merged by the ``t % II``
         fold — each group's variables share one kernel-cycle slot."""
@@ -236,43 +391,239 @@ class EncoderSession:
                                if ps in reach]
                     yield [-w] + support
 
+    # ------------------------------------------------- vectorised emitters
+    def _c2_fold_flat(self, ii: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Pairwise C2 fold as one flat block: per fold group, the ¬u∨¬w
+        pairs in i<j order — the stream ``at_most_one(group_lits)`` emits."""
+        lay = self._ensure_layout()
+        flats: List[np.ndarray] = []
+        lens: List[np.ndarray] = []
+        for group in self.c2_fold_groups(ii):
+            if len(group) == 1:
+                arr = lay.pt_blocks[lay.pt_index[group[0]]]
+            else:
+                arr = np.concatenate(
+                    [lay.pt_blocks[lay.pt_index[k]] for k in group])
+            k = arr.size
+            if k <= 1:
+                continue
+            iu, ju = _triu(k)
+            flats.append(_neg_pairs(arr[iu], arr[ju]))
+            lens.append(np.full(iu.size, 2, dtype=np.int64))
+        return _concat(flats, lens)
+
+    def _c2_delta_flat(self, ii: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Pairwise C2 fold, *cross-time pairs only* (the incremental
+        delta; within-slot pairs live in the base skeleton). Order matches
+        the legacy loop: fold groups in order; inside a group, slot-block
+        pairs (a,b) in lex order, then the (u,w) cartesian product
+        row-major."""
+        lay = self._ensure_layout()
+        flats: List[np.ndarray] = []
+        lens: List[np.ndarray] = []
+        for group in self.c2_fold_groups(ii):
+            if len(group) <= 1:
+                continue
+            blocks = [lay.pt_blocks[lay.pt_index[k]] for k in group]
+            sizes = np.asarray([b.size for b in blocks], dtype=np.int64)
+            ai, bi = _triu(len(blocks))
+            cnt = sizes[ai] * sizes[bi]
+            total = int(cnt.sum())
+            if total == 0:
+                continue
+            rep = np.repeat(np.arange(ai.size), cnt)
+            m = np.arange(total, dtype=np.int64) \
+                - np.repeat(np.cumsum(cnt) - cnt, cnt)
+            cat = np.concatenate(blocks)
+            starts = np.cumsum(sizes) - sizes
+            wb = sizes[bi][rep]
+            u = cat[starts[ai][rep] + m // wb]
+            w = cat[starts[bi][rep] + m % wb]
+            flats.append(_neg_pairs(u, w))
+            lens.append(np.full(total, 2, dtype=np.int64))
+        return _concat(flats, lens)
+
+    def _c2w_flat(self, ii: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Write-port conflicts as a flat block — same grouping-by-first-
+        occurrence and var-major member order as ``c2w_clauses``. Uniform
+        latencies short-circuit to zero clauses (as the generator does)."""
+        lay = self._ensure_layout()
+        empty = (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+        if not lay.mixed_lat or lay.v_t.size == 0:
+            return empty
+        keys = lay.v_pe * ii + (lay.v_t + lay.v_lat) % ii
+        _, first_idx, inv = np.unique(keys, return_index=True,
+                                      return_inverse=True)
+        # rank sorted-unique groups by first occurrence (dict insertion order)
+        grank = np.empty(first_idx.size, dtype=np.int64)
+        grank[np.argsort(first_idx, kind="stable")] = \
+            np.arange(first_idx.size)
+        g = grank[inv]
+        order = np.argsort(g, kind="stable")   # group-major, var-order within
+        counts = np.bincount(g)
+        starts = np.cumsum(counts) - counts
+        vs = order + 1                         # member var ids, group-major
+        lats = lay.v_lat[order]
+        flats: List[np.ndarray] = []
+        lens: List[np.ndarray] = []
+        for gi in range(counts.size):
+            k = int(counts[gi])
+            if k < 2:
+                continue
+            s = int(starts[gi])
+            mem_v = vs[s:s + k]
+            mem_l = lats[s:s + k]
+            iu, ju = _triu(k)
+            mask = mem_l[iu] != mem_l[ju]
+            if not mask.any():
+                continue
+            flats.append(_neg_pairs(mem_v[iu[mask]], mem_v[ju[mask]]))
+            lens.append(np.full(int(mask.sum()), 2, dtype=np.int64))
+        return _concat(flats, lens)
+
+    def _c3_rows(self) -> "_C3Rows":
+        """II-independent constants of every C3 clause row, batched.
+
+        C3's clause set has one clause per (edge, td, pd) — the *rows* —
+        and only the producer-time window per row moves with II. Everything
+        else (the head literal, the per-row PE selection and its slice of
+        the concatenated selection table, the window's affine coefficients)
+        is fixed, so it is materialised once here as flat row-major arrays
+        and each ``_c3_flat(ii)`` call is ~a dozen whole-array ops total,
+        independent of edge count. Built on first use, ~O(rows)."""
+        if self._c3_row_cache is not None:
+            return self._c3_row_cache
+        lay = self._ensure_layout()
+        parts: Dict[str, List[np.ndarray]] = {
+            k: [] for k in ("td", "a_s", "b_s", "lo0", "hi0", "hi1",
+                            "head", "npsel", "selstart", "const", "p_s")}
+        sel_parts: List[np.ndarray] = []
+        sel_top = 0
+        for src, dst, delta in self.dfg.edges():
+            p_d, p_s = lay.npes[dst], lay.npes[src]
+            if p_d == 0:
+                continue    # no dst literals -> the generator yields nothing
+            src_pes = self.allowed_pes[src]
+            sels = [np.asarray([i for i, ps in enumerate(src_pes)
+                                if ps in self.reach_from[pd]],
+                               dtype=np.int64)
+                    for pd in self.allowed_pes[dst]]
+            npsel = np.asarray([s.size for s in sels], dtype=np.int64)
+            selstart = sel_top + np.cumsum(npsel) - npsel
+            sel_parts.extend(sels)
+            sel_top += int(npsel.sum())
+            lat_s = self.lat[src]
+            a_s, b_s = self.asap[src], self.alap[src]
+            a_d, b_d = self.asap[dst], self.alap[dst]
+            ntd = b_d - a_d + 1
+            n_rows = ntd * p_d
+            td = np.repeat(np.arange(a_d, b_d + 1, dtype=np.int64), p_d)
+            parts["td"].append(td)
+            parts["a_s"].append(np.full(n_rows, a_s, dtype=np.int64))
+            parts["b_s"].append(np.full(n_rows, b_s, dtype=np.int64))
+            # window bounds are affine in II: lo = lo0 + ii*(-delta),
+            # hi = hi0 + ii*(1-delta) -> store the coefficients
+            parts["lo0"].append(np.full(n_rows, lat_s, dtype=np.int64))
+            parts["hi0"].append(np.full(n_rows, lat_s - 1, dtype=np.int64))
+            parts["hi1"].append(np.full(n_rows, delta, dtype=np.int64))
+            parts["head"].append(
+                lay.base0[dst] + 1 + (td - a_d) * p_d
+                + np.tile(np.arange(p_d, dtype=np.int64), ntd))
+            parts["npsel"].append(np.tile(npsel, ntd))
+            parts["selstart"].append(np.tile(selstart, ntd))
+            # var(src, ts, psel) = const + ts*p_s + psel
+            parts["const"].append(
+                np.full(n_rows, lay.base0[src] + 1 - a_s * p_s,
+                        dtype=np.int64))
+            parts["p_s"].append(np.full(n_rows, p_s, dtype=np.int64))
+        empty = np.zeros(0, dtype=np.int64)
+
+        def cat(key: str) -> np.ndarray:
+            return np.concatenate(parts[key]) if parts[key] else empty
+
+        self._c3_row_cache = _C3Rows(
+            td=cat("td"), a_s=cat("a_s"), b_s=cat("b_s"),
+            lo0=cat("lo0"), hi0=cat("hi0"), hi1=cat("hi1"),
+            head=cat("head"), npsel=cat("npsel"), selstart=cat("selstart"),
+            const=cat("const"), p_s=cat("p_s"),
+            sel=np.concatenate(sel_parts) if sel_parts else empty)
+        return self._c3_row_cache
+
+    def _c3_flat(self, ii: int) -> Tuple[np.ndarray, np.ndarray]:
+        """C3 as one flat block over all edges. The legal producer times
+        for a row form the contiguous range ``[max(asap_s, td-hi),
+        min(alap_s, td-lo)]``; with the II-independent row constants from
+        :meth:`_c3_rows`, each clause — head ``¬w`` plus its ts-major/
+        psel-minor support — is a closed-form gather."""
+        rows = self._c3_rows()
+        n_rows = rows.td.size
+        if n_rows == 0:
+            return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+        # lo = lat_s - delta*ii ; hi = (1 - delta)*ii + lat_s - 1
+        lo = rows.lo0 - rows.hi1 * ii
+        hi = rows.hi0 + (1 - rows.hi1) * ii
+        ts0 = np.maximum(rows.a_s, rows.td - hi)
+        ntim = np.minimum(rows.b_s, rows.td - lo) - ts0 + 1
+        np.maximum(ntim, 0, out=ntim)
+        sup = ntim * rows.npsel
+        lens = sup + 1
+        offs = np.empty(n_rows + 1, dtype=np.int64)
+        offs[0] = 0
+        np.cumsum(lens, out=offs[1:])
+        flat = np.empty(int(offs[-1]), dtype=np.int64)
+        flat[offs[:-1]] = -rows.head
+        total_sup = int(sup.sum())
+        if total_sup:
+            r = np.repeat(np.arange(n_rows), sup)
+            m = np.arange(total_sup, dtype=np.int64) \
+                - np.repeat(offs[:-1] - np.arange(n_rows), sup)
+            nj = rows.npsel[r]
+            k = m // nj
+            val = rows.const[r] + (ts0[r] + k) * rows.p_s[r] \
+                + rows.sel[rows.selstart[r] + m - k * nj]
+            flat[np.repeat(offs[:-1] + 1, sup) + m] = val
+        return flat, lens
+
     # ---------------------------------------------------------------- build
-    def encode(self, ii: int) -> Encoding:
+    def encode(self, ii: int, emitters: Optional[str] = None) -> Encoding:
+        mode = self.emitters if emitters is None else emitters
         dfg, cgra = self.dfg, self.cgra
         lay = self._ensure_layout()
-        kms = build_kms(dfg, ii, lat=self.lat)
 
         cnf = CNF()
         cnf.n_vars = lay.n_vars
-        cnf.clauses = list(lay.c1_clauses)   # shared tuples, fresh list
+        cnf.arena = lay.c1_arena.copy()      # shared C1, one memcpy
+        cnf.trivially_unsat = lay.c1_trivial
         n_c1 = lay.n_c1
-
-        var_of: Dict[Tuple[int, int, int, int], int] = {
-            (n, p, t % ii, t // ii): v
-            for (n, p, t), v in lay.var_of_t.items()}
-        info: Dict[int, Lit] = {
-            v + 1: Lit(n, p, t % ii, t // ii)
-            for v, (n, p, t) in enumerate(lay.info_t)}
 
         n_c2 = cnf.n_clauses
         # C2: at most one node per (PE, kernel cycle) (Eq. 2) — fold the
         # precomputed (PE, flat-time) slot skeleton by t % II
-        for group in self.c2_fold_groups(ii):
-            lits = [v for key in group for v in lay.by_pt[key]]
-            cnf.at_most_one(lits, self.amo)
+        if mode == "vector" and self.amo == "pairwise":
+            cnf.extend_flat(*self._c2_fold_flat(ii))
+        else:
+            for group in self.c2_fold_groups(ii):
+                lits = [v for key in group for v in lay.by_pt[key]]
+                cnf.at_most_one(lits, self.amo)
         # write-port conflicts between mixed-latency nodes (empty on
         # unit-latency fabrics), counted with C2 as resource conflicts
-        for cl in self.c2w_clauses(ii):
-            cnf.add_clause(cl)
+        if mode == "vector":
+            cnf.extend_flat(*self._c2w_flat(ii))
+        else:
+            for cl in self.c2w_clauses(ii):
+                cnf.add_clause(cl)
         n_c2 = cnf.n_clauses - n_c2
 
         n_c3 = cnf.n_clauses
-        for cl in self.c3_clauses(ii):
-            cnf.add_clause(cl)
+        if mode == "vector":
+            cnf.extend_flat(*self._c3_flat(ii))
+        else:
+            for cl in self.c3_clauses(ii):
+                cnf.add_clause(cl)
         n_c3 = cnf.n_clauses - n_c3
 
-        enc = Encoding(cnf=cnf, kms=kms, cgra=cgra, dfg=dfg,
-                       var_of=var_of, info=info)
+        enc = Encoding(cnf=cnf, kms=None, cgra=cgra, dfg=dfg,
+                       layout=lay, ii=ii, lat=self.lat)
         enc.stats = {"vars": cnf.n_vars, "clauses": cnf.n_clauses,
                      "c1": n_c1, "c2": n_c2, "c3": n_c3}
         return enc
@@ -311,15 +662,28 @@ class IncrementalEncoding:
         self._lay = lay
         inc = IncrementalCNF()
         inc.n_vars = lay.n_vars
-        inc.clauses = list(lay.c1_clauses)       # shared tuples, fresh list
-        inc.trivially_unsat = any(not c for c in lay.c1_clauses)
+        inc.arena = lay.c1_arena.copy()          # shared C1, one memcpy
+        inc.trivially_unsat = lay.c1_trivial
         self.n_c1 = lay.n_c1
         # within-slot C2 skeleton: same (PE, flat-time) collisions hold at
-        # every II (t1 == t2  =>  t1 % ii == t2 % ii)
-        for key in lay.pt_keys:
-            inc.at_most_one(lay.by_pt[key], "pairwise")
+        # every II (t1 == t2  =>  t1 % ii == t2 % ii); always pairwise,
+        # emitted as one block (the stream per-key at_most_one would emit)
+        flats: List[np.ndarray] = []
+        lens: List[np.ndarray] = []
+        for blk in lay.pt_blocks:
+            k = blk.size
+            if k <= 1:
+                continue
+            iu, ju = _triu(k)
+            flats.append(_neg_pairs(blk[iu], blk[ju]))
+            lens.append(np.full(iu.size, 2, dtype=np.int64))
+        inc.extend_flat(*_concat(flats, lens))
         self.inc = inc
         self.n_base = inc.n_clauses
+        # per-II projection memo: layers are immutable once encoded, so a
+        # projection only changes when n_vars has grown (new layers add
+        # selector/aux vars and project() stamps the current n_vars)
+        self._proj_cache: Dict[Hashable, Tuple[int, CNF]] = {}
 
     # ---------------------------------------------------------------- build
     def ensure_ii(self, ii: int) -> int:
@@ -328,33 +692,42 @@ class IncrementalEncoding:
         if inc.has_layer(ii):
             return inc.selector(ii)
         session, lay = self.session, self._lay
+        mode = session.emitters
         sel = inc.begin_layer(ii)
         # C2 fold: slots merged by t % II (shared generator with the cold
         # encoder — see EncoderSession.c2_fold_groups)
-        for group in session.c2_fold_groups(ii):
-            if len(group) <= 1:
-                continue
-            if session.amo == "pairwise":
-                # cross-time pairs only — within-slot pairs live in the base
-                for a in range(len(group)):
-                    for b in range(a + 1, len(group)):
-                        for u in lay.by_pt[group[a]]:
-                            for w in lay.by_pt[group[b]]:
-                                inc.add(-u, -w)
-            else:
-                # Sinz over the whole folded group (aux vars live in the
-                # layer); the base pairwise skeleton stays as redundant
-                # helper clauses
-                lits = [v for key in group for v in lay.by_pt[key]]
-                inc.at_most_one(lits, session.amo)
-        # write-port conflicts between mixed-latency nodes — same
-        # generator as the cold encoder (empty on unit-latency fabrics)
-        for cl in session.c2w_clauses(ii):
-            inc.add_clause(cl)
-        # C3 timing windows for this II, clauses guarded by the layer
-        # selector — same generator the cold encoder consumes
-        for cl in session.c3_clauses(ii):
-            inc.add_clause(cl)
+        if mode == "vector" and session.amo == "pairwise":
+            # cross-time pairs only — within-slot pairs live in the base;
+            # extend_flat guards every row with ¬selector
+            inc.extend_flat(*session._c2_delta_flat(ii))
+        else:
+            for group in session.c2_fold_groups(ii):
+                if len(group) <= 1:
+                    continue
+                if session.amo == "pairwise":
+                    # cross-time pairs only — within-slot pairs live in the base
+                    for a in range(len(group)):
+                        for b in range(a + 1, len(group)):
+                            for u in lay.by_pt[group[a]]:
+                                for w in lay.by_pt[group[b]]:
+                                    inc.add(-u, -w)
+                else:
+                    # Sinz over the whole folded group (aux vars live in the
+                    # layer); the base pairwise skeleton stays as redundant
+                    # helper clauses
+                    lits = [v for key in group for v in lay.by_pt[key]]
+                    inc.at_most_one(lits, session.amo)
+        # write-port conflicts between mixed-latency nodes — same family
+        # as the cold encoder (empty on unit-latency fabrics); then C3
+        # timing windows for this II, clauses guarded by the layer selector
+        if mode == "vector":
+            inc.extend_flat(*session._c2w_flat(ii))
+            inc.extend_flat(*session._c3_flat(ii))
+        else:
+            for cl in session.c2w_clauses(ii):
+                inc.add_clause(cl)
+            for cl in session.c3_clauses(ii):
+                inc.add_clause(cl)
         inc.end_layer()
         return sel
 
@@ -365,9 +738,18 @@ class IncrementalEncoding:
 
     def project(self, ii: int) -> CNF:
         """Plain (unguarded) CNF for base + II's delta — for backends
-        without assumption support and for cold-path equivalence checks."""
+        without assumption support and for cold-path equivalence checks.
+        Memoised per (ii, n_vars): layers never change once encoded, so a
+        cached projection stays valid until new layers grow ``n_vars``.
+        Callers must treat the returned CNF as immutable."""
         self.ensure_ii(ii)
-        return self.inc.project(ii)
+        nv = self.inc.n_vars
+        hit = self._proj_cache.get(ii)
+        if hit is not None and hit[0] == nv:
+            return hit[1]
+        cnf = self.inc.project(ii)
+        self._proj_cache[ii] = (nv, cnf)
+        return cnf
 
     def stats_for(self, ii: int) -> Dict[str, int]:
         self.ensure_ii(ii)
@@ -389,5 +771,6 @@ class IncrementalEncoding:
         return placement
 
 
-def encode(dfg: DFG, cgra: CGRA, ii: int, amo: str = "pairwise") -> Encoding:
-    return EncoderSession(dfg, cgra, amo).encode(ii)
+def encode(dfg: DFG, cgra: CGRA, ii: int, amo: str = "pairwise",
+           emitters: str = "vector") -> Encoding:
+    return EncoderSession(dfg, cgra, amo, emitters=emitters).encode(ii)

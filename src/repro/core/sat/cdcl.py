@@ -7,6 +7,15 @@ framework produces (1e4–1e5 vars, 1e5–1e6 clauses) — pure Python, so Z3 is
 preferred when present; this backend is the always-available fallback and
 the reference for the JAX portfolio's UNSAT certification.
 
+Clause storage is flat (mirroring ``repro.core.cnf.ClauseArena``): one
+literal list ``db`` plus per-clause ``cl_off``/``cl_len`` indexed by clause
+id, and watch lists held in a dense list indexed by literal code
+(``2v`` for ``+v``, ``2v+1`` for ``¬v``) instead of a dict keyed by signed
+literal. The propagation loop then touches only small-int list indexing —
+no dict hashing, no tuple allocation — while keeping the *identical*
+decision/learning behaviour (watch order, clause order, restart schedule),
+so ``last_core``, learnt-DB eviction, and all stats are unchanged.
+
 Incremental interface (the assumption-based sweep core):
 
   * ``solve(assumptions=[...])`` — MiniSat-style: assumptions are enqueued
@@ -45,7 +54,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Tuple
 
-from ..cnf import CNF
+from ..cnf import CNF, ClauseArena
 
 
 def solve_clauses_worker(n_vars: int, clauses: List[Tuple[int, ...]],
@@ -56,6 +65,17 @@ def solve_clauses_worker(n_vars: int, clauses: List[Tuple[int, ...]],
     cnf = CNF()
     cnf.n_vars = n_vars
     cnf.clauses = [tuple(c) for c in clauses]
+    return CDCLSolver(cnf).solve()
+
+
+def solve_arena_worker(n_vars: int, lits, offs,
+                       ) -> Tuple[str, Optional[List[bool]]]:
+    """Like :func:`solve_clauses_worker` but takes the clause arena's raw
+    (lits, offs) CSR arrays — two contiguous numpy buffers pickle across
+    the pool far cheaper than a list of int tuples."""
+    cnf = CNF()
+    cnf.n_vars = n_vars
+    cnf.arena = ClauseArena.from_arrays(lits, offs)
     return CDCLSolver(cnf).solve()
 
 
@@ -72,12 +92,21 @@ def _luby(x: int) -> int:
     return 1 << seq
 
 
+def _lit_code(lit: int) -> int:
+    """Dense watch-list index: +v -> 2v, ¬v -> 2v+1."""
+    return (lit << 1) if lit > 0 else ((-lit << 1) | 1)
+
+
 class CDCLSolver:
     def __init__(self, cnf: Optional[CNF] = None,
                  max_learnt: Optional[int] = None):
         self.nv = 0
-        self.clauses: List[List[int]] = []
-        self.watches: Dict[int, List[int]] = {}
+        # flat clause database: clause ci is db[cl_off[ci] : cl_off[ci]+cl_len[ci]]
+        self.db: List[int] = []
+        self.cl_off: List[int] = []
+        self.cl_len: List[int] = []
+        # watch lists indexed by literal code (2v / 2v+1)
+        self.watches: List[List[int]] = [[], []]
         # assignment: 0 unassigned, 1 true, -1 false (index = var)
         self.assign = [0]
         self.level = [0]
@@ -120,6 +149,7 @@ class CDCLSolver:
         self.reason.extend([None] * extra)
         self.activity.extend([0.0] * extra)
         self.saved_phase.extend([False] * extra)
+        self.watches.extend([] for _ in range(2 * extra))
         self.nv = n_vars
 
     def add_clauses(self, clauses, n_vars: Optional[int] = None) -> bool:
@@ -127,16 +157,31 @@ class CDCLSolver:
         learned clauses and heuristic state are kept). Returns False — and
         latches the solver UNSAT — on an empty clause."""
         self._backtrack(0)
+        rows = clauses.iter_lists() if hasattr(clauses, "iter_lists") \
+            else clauses
         if n_vars is not None:
             self.grow_vars(n_vars)
+        elif hasattr(clauses, "max_var"):
+            self.grow_vars(clauses.max_var())
         else:
-            self.grow_vars(max((abs(l) for cl in clauses for l in cl),
+            rows = [list(cl) for cl in rows]
+            self.grow_vars(max((abs(l) for cl in rows for l in cl),
                                default=0))
-        for cl in clauses:
+        for cl in rows:
             self.n_input += 1
             if not self._add_clause(list(cl)):
                 self.ok = False
         return self.ok
+
+    @property
+    def n_clauses(self) -> int:
+        return len(self.cl_len)
+
+    @property
+    def clauses(self) -> List[List[int]]:
+        """Materialised clause list (debugging/introspection only — the
+        solver itself reads the flat ``db``)."""
+        return [self.db[o:o + n] for o, n in zip(self.cl_off, self.cl_len)]
 
     @property
     def learnt_db_size(self) -> int:
@@ -151,7 +196,19 @@ class CDCLSolver:
         return v if lit > 0 else -v
 
     def _watch(self, lit: int, ci: int) -> None:
-        self.watches.setdefault(lit, []).append(ci)
+        self.watches[(lit << 1) if lit > 0 else ((-lit << 1) | 1)].append(ci)
+
+    def _append_db(self, lits: List[int]) -> int:
+        """Append a clause to the flat database; returns its clause id."""
+        ci = len(self.cl_len)
+        self.cl_off.append(len(self.db))
+        self.cl_len.append(len(lits))
+        self.db.extend(lits)
+        return ci
+
+    def _clause(self, ci: int) -> List[int]:
+        off = self.cl_off[ci]
+        return self.db[off:off + self.cl_len[ci]]
 
     def _add_clause(self, lits: List[int]) -> bool:
         lits = sorted(set(lits), key=abs)
@@ -164,8 +221,7 @@ class CDCLSolver:
         if len(lits) == 1:
             self._units.append(lits[0])
             return True
-        ci = len(self.clauses)
-        self.clauses.append(lits)
+        ci = self._append_db(lits)
         self._watch(lits[0], ci)
         self._watch(lits[1], ci)
         return True
@@ -186,11 +242,19 @@ class CDCLSolver:
 
     def _propagate(self) -> Optional[int]:
         """Returns conflicting clause index or None."""
-        while self.qhead < len(self.trail):
-            lit = self.trail[self.qhead]
+        db = self.db
+        cl_off = self.cl_off
+        cl_len = self.cl_len
+        watches = self.watches
+        assign = self.assign
+        trail = self.trail
+        while self.qhead < len(trail):
+            lit = trail[self.qhead]
             self.qhead += 1
             falsified = -lit
-            wl = self.watches.get(falsified)
+            fcode = (falsified << 1) if falsified > 0 \
+                else ((-falsified << 1) | 1)
+            wl = watches[fcode]
             if not wl:
                 continue
             keep: List[int] = []
@@ -198,31 +262,36 @@ class CDCLSolver:
             while i < len(wl):
                 ci = wl[i]
                 i += 1
-                cl = self.clauses[ci]
-                # ensure falsified is cl position 1
-                if cl[0] == falsified:
-                    cl[0], cl[1] = cl[1], cl[0]
-                first = cl[0]
-                if self._value(first) == 1:
+                off = cl_off[ci]
+                # ensure falsified is clause position 1
+                if db[off] == falsified:
+                    db[off] = db[off + 1]
+                    db[off + 1] = falsified
+                first = db[off]
+                fval = assign[first] if first > 0 else -assign[-first]
+                if fval == 1:
                     keep.append(ci)
                     continue
                 # search replacement watch
                 moved = False
-                for k in range(2, len(cl)):
-                    if self._value(cl[k]) != -1:
-                        cl[1], cl[k] = cl[k], cl[1]
-                        self._watch(cl[1], ci)
+                for k in range(off + 2, off + cl_len[ci]):
+                    q = db[k]
+                    if (assign[q] if q > 0 else -assign[-q]) != -1:
+                        db[off + 1] = q
+                        db[k] = falsified
+                        watches[(q << 1) if q > 0
+                                else ((-q << 1) | 1)].append(ci)
                         moved = True
                         break
                 if moved:
                     continue
                 keep.append(ci)
-                if self._value(first) == -1:
+                if fval == -1:
                     keep.extend(wl[i:])
-                    self.watches[falsified] = keep
+                    watches[fcode] = keep
                     return ci
                 self._enqueue(first, ci)
-            self.watches[falsified] = keep
+            watches[fcode] = keep
         return None
 
     # -------------------------------------------------------------- branch
@@ -250,11 +319,10 @@ class CDCLSolver:
         ci: Optional[int] = confl
         first = True
         while True:
-            cl = self.clauses[ci]
+            cl = self._clause(ci)
             meta = self._learnt_meta.get(ci)
             if meta is not None:    # learnt clause used in analysis: bump
                 meta[0] += self.cla_inc
-            start = 0 if first else 1
             # for reason clauses, cl[0] is the propagated literal
             for q in (cl if first else cl[1:] if cl[0] == lit else
                       [x for x in cl if x != lit]):
@@ -315,7 +383,7 @@ class CDCLSolver:
             if r is None:
                 core.append(q)  # assumption pseudo-decision (as enqueued)
             else:
-                for x in self.clauses[r]:
+                for x in self._clause(r):
                     if abs(x) != v and self.level[abs(x)] > 0:
                         seen.add(abs(x))
             seen.discard(v)
@@ -331,13 +399,14 @@ class CDCLSolver:
         locked as the propagation reason of a currently-assigned variable
         are always kept (required for soundness of the trail); everything
         else competes for the ``max_learnt // 2`` slots, so retention
-        stays bounded. The clause list is compacted and watches / reason
+        stays bounded. The flat database is compacted and watches / reason
         indices remapped, so this is safe at any decision level."""
         locked = {self.reason[abs(lit)] for lit in self.trail
                   if self.reason[abs(lit)] is not None}
         target = max(0, (self.max_learnt or 0) // 2)
         ranked = sorted(self._learnt_meta.items(),
-                        key=lambda kv: (kv[1][1], -kv[1][0], len(self.clauses[kv[0]])))
+                        key=lambda kv: (kv[1][1], -kv[1][0],
+                                        self.cl_len[kv[0]]))
         keep = set()
         for ci, (act, lbd) in ranked:
             if ci in locked or len(keep) < target:
@@ -346,13 +415,18 @@ class CDCLSolver:
         if dropped == 0:
             return
         remap: Dict[int, int] = {}
-        new_clauses: List[List[int]] = []
-        for ci, cl in enumerate(self.clauses):
+        new_db: List[int] = []
+        new_off: List[int] = []
+        new_len: List[int] = []
+        for ci in range(len(self.cl_len)):
             if ci in self._learnt_meta and ci not in keep:
                 continue
-            remap[ci] = len(new_clauses)
-            new_clauses.append(cl)
-        self.clauses = new_clauses
+            remap[ci] = len(new_len)
+            off, n = self.cl_off[ci], self.cl_len[ci]
+            new_off.append(len(new_db))
+            new_len.append(n)
+            new_db.extend(self.db[off:off + n])
+        self.db, self.cl_off, self.cl_len = new_db, new_off, new_len
         self._learnt_meta = {remap[ci]: meta
                              for ci, meta in self._learnt_meta.items()
                              if ci in keep}
@@ -364,10 +438,11 @@ class CDCLSolver:
                 self.reason[v] = None       # stale entry of an unassigned var
         # positions 0/1 are exactly the watched literals (the propagate
         # loop maintains that invariant), so rebuilding from them is exact
-        self.watches = {}
-        for ci, cl in enumerate(self.clauses):
-            self._watch(cl[0], ci)
-            self._watch(cl[1], ci)
+        self.watches = [[] for _ in range(2 * (self.nv + 1))]
+        for ci in range(len(self.cl_len)):
+            off = self.cl_off[ci]
+            self._watch(self.db[off], ci)
+            self._watch(self.db[off + 1], ci)
         self.n_learnt -= dropped
         self.evicted_total += dropped
 
@@ -451,8 +526,7 @@ class CDCLSolver:
                             self.last_core = []
                             return UNSAT, None
                     else:
-                        ci = len(self.clauses)
-                        self.clauses.append(learnt)
+                        ci = self._append_db(learnt)
                         self._watch(learnt[0], ci)
                         self._watch(learnt[1], ci)
                         self._enqueue(learnt[0], ci)

@@ -164,6 +164,9 @@ class SolveStats:
     # assignment as CDCL saved phases — the walksat racer's asynchronous
     # feedback channel into the complete leg
     phase_hinted: bool = False
+    # the walksat leg reused a cached dense pack of this II's projection
+    # instead of re-packing (None = no walksat leg ran)
+    pack_reused: Optional[bool] = None
 
 
 class SolverSession:
@@ -226,6 +229,13 @@ class SolverSession:
         # out to complete solves (see phase_hint())
         self.near_miss_updates = 0
         self.phase_hints_served = 0
+        # dense-pack caches for the walksat legs: per-II host packs and the
+        # last stacked window pack, both keyed on the projection's identity
+        # (arena literal count, n_vars) — the formula is append-only, so an
+        # unchanged (length, vars) pair means an unchanged clause stream
+        self._pack_np: Dict[int, Tuple[Tuple[int, int], object]] = {}
+        self._pack_window: Optional[Tuple[tuple, object]] = None
+        self.pack_reuses = 0                  # cache hits across all legs
 
     # ------------------------------------------------------------- formula
     def ensure_ii(self, ii: int) -> None:
@@ -236,6 +246,43 @@ class SolverSession:
 
     def stats_for(self, ii: int):
         return self.enc.stats_for(ii)
+
+    # ------------------------------------------------------------ pack cache
+    def host_pack(self, ii: int) -> Tuple[object, bool]:
+        """Dense host pack of ``project(ii)``, cached. Returns (pack,
+        reused). The session formula only ever grows (layers are guarded,
+        never retracted), so (arena literal count, n_vars) identifies the
+        projection's exact clause stream — a matching key means the cached
+        pack is bit-identical to what ``pack_cnf_np`` would rebuild."""
+        from .walksat_jax import pack_cnf_np
+        cnf = self.project(ii)
+        key = (cnf.arena.n_lits, cnf.n_vars)
+        hit = self._pack_np.get(ii)
+        if hit is not None and hit[0] == key:
+            self.pack_reuses += 1
+            return hit[1], True
+        pack = pack_cnf_np(cnf)
+        self._pack_np[ii] = (key, pack)
+        return pack, False
+
+    def packed_window(self, iis: List[int], cnfs: List[CNF],
+                      ) -> Tuple[object, List[object], bool]:
+        """Stacked device pack for a window of per-II projections, cached.
+        Returns (packed, per-CNF host packs, reused). A warm sweep leg
+        re-solving an unchanged window reuses the device tensors outright
+        (zero packing); a grown window restacks from the per-II host-pack
+        cache, repacking only the IIs whose projections changed."""
+        from .walksat_jax import pack_cnf_window
+        key = tuple((ii, c.arena.n_lits, c.n_vars)
+                    for ii, c in zip(iis, cnfs))
+        cached = self._pack_window
+        host = [self.host_pack(ii)[0] for ii in iis]
+        if cached is not None and cached[0] == key:
+            self.pack_reuses += 1
+            return cached[1], host, True
+        packed = pack_cnf_window(cnfs, host)
+        self._pack_window = (key, packed)
+        return packed, host, False
 
     def _backend(self):
         if self.complete_method == "z3":
@@ -339,11 +386,13 @@ class SolverSession:
         init = self.warm_init()
         near: dict = {}
         cnf = self.project(ii)
+        pack, reused = self.host_pack(ii)
         status, model = solve_walksat(
             cnf, seed=self.seed, steps=self.walksat_steps,
-            batch=self.walksat_batch, stop=stop, init=init, near_miss=near)
+            batch=self.walksat_batch, stop=stop, init=init, near_miss=near,
+            pack=pack)
         if status == SAT:
-            stats = SolveStats(via="walksat")
+            stats = SolveStats(via="walksat", pack_reused=reused)
             if init is not None:
                 stats.warm_hamming = _hamming(init, model)
             self.update_best(model, 0)
@@ -353,7 +402,8 @@ class SolverSession:
             self.update_best(near[0][1], near[0][0])
         if self.raw_method == "walksat":
             self.n_solves += 1
-            return status, None, SolveStats(via="walksat")
+            return status, None, SolveStats(via="walksat",
+                                            pack_reused=reused)
         return self.solve_complete(ii, stop=stop, phase_hint=phase_hint)
 
     # ------------------------------------------------------------ warm state
@@ -520,10 +570,15 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
         from .walksat_jax import solve_walksat_window
         inits = None
         near: dict = {}
+        packed = hpacks = None
         if session is not None:
             warm = session.warm_init()
             if warm is not None:
                 inits = [warm] * K
+            if iis is not None:
+                # session windows are per-II projections: reuse the cached
+                # device/host packs, skipping packing when nothing changed
+                packed, hpacks, _ = session.packed_window(iis, cnfs)
 
         def on_sat_cb(i: int, model) -> None:
             st = None
@@ -551,7 +606,8 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                 on_sat=on_sat_cb, inits=inits,
                 near_miss=near if session is not None else None,
                 on_near_miss=on_near_miss_cb if session is not None
-                else None)
+                else None,
+                packed=packed, packs=hpacks)
         except Exception:   # incomplete leg must never take down the window
             pass
         if session is not None:
@@ -638,11 +694,22 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
         pool = _proc_pool()
         if pool is None:
             return None
-        from .cdcl import solve_clauses_worker
+        from .cdcl import solve_arena_worker, solve_clauses_worker
         try:
-            return {i: pool.submit(solve_clauses_worker,
-                                   cnfs[i].n_vars, cnfs[i].clauses)
-                    for i in range(K)}
+            futs = {}
+            for i in range(K):
+                arena = getattr(cnfs[i], "arena", None)
+                if arena is not None:
+                    # ship the CSR arrays — two contiguous numpy buffers
+                    # pickle far cheaper than a list of int tuples
+                    futs[i] = pool.submit(solve_arena_worker,
+                                          cnfs[i].n_vars,
+                                          arena.lits_view(),
+                                          arena.offs_view())
+                else:
+                    futs[i] = pool.submit(solve_clauses_worker,
+                                          cnfs[i].n_vars, cnfs[i].clauses)
+            return futs
         except Exception:
             _PROC_POOL_BROKEN, _PROC_POOL = True, None
             return None
@@ -747,12 +814,16 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
         from .walksat_jax import solve_walksat_window
         warm = session.warm_init() if session is not None else None
         near: dict = {}
+        packed = hpacks = None
+        if session is not None and iis is not None:
+            packed, hpacks, _ = session.packed_window(iis, cnfs)
         ws = solve_walksat_window(
             cnfs, seed=seed, steps=walksat_steps, batch=walksat_batch,
             stop=past_deadline, should_skip=lambda i: stops[i].is_set(),
             on_sat=lambda i, model: deliver(i, SAT, model, "walksat"),
             inits=[warm] * K if warm is not None else None,
-            near_miss=near if session is not None else None)
+            near_miss=near if session is not None else None,
+            packed=packed, packs=hpacks)
         if session is not None:
             for nu, a in near.values():
                 session.update_best(a, nu)

@@ -86,28 +86,68 @@ class PackedCNF(NamedTuple):
     n_clauses: int
 
 
-def pack_cnf(cnf: CNF) -> PackedCNF:
-    lmax = max((len(c) for c in cnf.clauses), default=1)
+class HostPack(NamedTuple):
+    """Host-side (numpy) twin of :class:`PackedCNF` — what the session-level
+    pack cache stores, so reuse never round-trips through device arrays."""
+    cvars: np.ndarray
+    csign: np.ndarray
+    ovars: np.ndarray
+    osign: np.ndarray
+    n_vars: int
+    n_clauses: int
+
+
+def pack_cnf_np(cnf: CNF) -> HostPack:
+    """Vectorised dense pack of one CNF, straight off the clause arena.
+
+    The arena *is* the CSR form of the formula — ``lits[offs[i]:offs[i+1]]``
+    is clause i — so the padded clause matrix is one scatter of the literal
+    buffer at ``(repeat(clause_id, lens), ranges(lens))`` and the occurrence
+    lists are the same scatter after a stable sort of the literals by
+    variable (stability keeps each variable's occurrences in (clause,
+    position) order, exactly the order the old per-clause append built).
+    No per-clause Python iteration anywhere.
+    """
+    arena = getattr(cnf, "arena", None)
+    if arena is not None:
+        lits = arena.lits_view()
+        offs = arena.offs_view()
+        lens = np.diff(offs)
+    else:   # degenerate / mock CNFs without an arena
+        rows = [list(c) for c in cnf.clauses]
+        lens = np.asarray([len(r) for r in rows], dtype=np.int64)
+        lits = np.asarray([l for r in rows for l in r], dtype=np.int32)
+        offs = np.concatenate([[0], np.cumsum(lens)])
     C = cnf.n_clauses
+    V = cnf.n_vars
+    n = lits.size
+    lmax = int(lens.max()) if C else 1
     cvars = np.zeros((C, lmax), np.int32)
     csign = np.zeros((C, lmax), bool)
-    occ: List[List[Tuple[int, bool]]] = [[] for _ in range(cnf.n_vars + 1)]
-    for ci, cl in enumerate(cnf.clauses):
-        for j, lit in enumerate(cl):
-            v = abs(lit)
-            cvars[ci, j] = v
-            csign[ci, j] = lit > 0
-            occ[v].append((ci, lit > 0))
-    omax = max((len(o) for o in occ), default=1)
-    ovars = np.full((cnf.n_vars + 1, omax), -1, np.int32)
-    osign = np.zeros((cnf.n_vars + 1, omax), bool)
-    for v, lst in enumerate(occ):
-        for j, (ci, s) in enumerate(lst):
-            ovars[v, j] = ci
-            osign[v, j] = s
-    return PackedCNF(jnp.asarray(cvars), jnp.asarray(csign),
-                     jnp.asarray(ovars), jnp.asarray(osign),
-                     cnf.n_vars, C)
+    rows = np.repeat(np.arange(C), lens)
+    cols = np.arange(n) - np.repeat(offs[:-1], lens)
+    av = np.abs(lits)
+    sg = lits > 0
+    cvars[rows, cols] = av
+    csign[rows, cols] = sg
+    counts = np.bincount(av, minlength=V + 1)
+    omax = int(counts.max()) if counts.size else 0
+    ovars = np.full((V + 1, omax), -1, np.int32)
+    osign = np.zeros((V + 1, omax), bool)
+    if n:
+        order = np.argsort(av, kind="stable")
+        va = av[order]
+        j = np.arange(n) - (np.cumsum(counts) - counts)[va]
+        ovars[va, j] = rows[order]
+        osign[va, j] = sg[order]
+    return HostPack(cvars, csign, ovars, osign, V, C)
+
+
+def pack_cnf(cnf: CNF) -> PackedCNF:
+    p = pack_cnf_np(cnf)
+    return PackedCNF(jnp.asarray(p.cvars), jnp.asarray(p.csign),
+                     jnp.asarray(p.ovars), jnp.asarray(p.osign),
+                     p.n_vars, p.n_clauses)
 
 
 def true_counts_ref(packed: PackedCNF, assign: jnp.ndarray) -> jnp.ndarray:
@@ -336,7 +376,9 @@ def _init_assign(key: jnp.ndarray, batch: int, n_vars_padded: int,
     return jnp.asarray(base)[None, :] ^ flips
 
 
-def pack_cnf_window(cnfs: List[CNF]) -> PackedCNF:
+def pack_cnf_window(cnfs: List[CNF],
+                    packs: Optional[List[Optional[HostPack]]] = None,
+                    ) -> PackedCNF:
     """Pack K CNFs into one stacked PackedCNF padded to common shapes.
 
     Shorter clause lists are padded with the tautology clause (v1 ∨ ¬v1) —
@@ -349,31 +391,38 @@ def pack_cnf_window(cnfs: List[CNF]) -> PackedCNF:
     All dims are rounded up to coarse buckets so different windows (other
     kernels, other CGRA sizes) reuse the same jitted computation instead of
     paying a fresh XLA compile per instance shape.
+
+    ``packs``, when given, supplies a precomputed :func:`pack_cnf_np` per
+    CNF (``None`` entries are packed here) — the session-level cache path
+    that makes warm window solves skip per-CNF packing entirely.
     """
-    packs = [pack_cnf(c) for c in cnfs]
-    K = len(packs)
-    V = _bucket(max(p.n_vars for p in packs), 128)
-    C = _bucket(max(p.n_clauses for p in packs), 1024)
-    L = max(p.cvars.shape[1] for p in packs)
-    O = max(p.ovars.shape[1] for p in packs)
+    host: List[HostPack] = []
+    for k, c in enumerate(cnfs):
+        p = packs[k] if packs is not None else None
+        host.append(p if p is not None else pack_cnf_np(c))
+    K = len(host)
+    V = _bucket(max(p.n_vars for p in host), 128)
+    C = _bucket(max(p.n_clauses for p in host), 1024)
+    L = max(p.cvars.shape[1] for p in host)
+    O = max(p.ovars.shape[1] for p in host)
     L = _bucket(max(L, 2), 4)  # room for the (v1, ¬v1) padding tautology
     O = _bucket(O, 8)
     cvars = np.zeros((K, C, L), np.int32)
     csign = np.zeros((K, C, L), bool)
     ovars = np.full((K, V + 1, O), -1, np.int32)
     osign = np.zeros((K, V + 1, O), bool)
-    for k, p in enumerate(packs):
+    for k, p in enumerate(host):
         c, l = p.cvars.shape
-        cvars[k, :c, :l] = np.asarray(p.cvars)
-        csign[k, :c, :l] = np.asarray(p.csign)
+        cvars[k, :c, :l] = p.cvars
+        csign[k, :c, :l] = p.csign
         # tautology padding for clause rows [c, C)
         cvars[k, c:, 0] = 1
         cvars[k, c:, 1] = 1
         csign[k, c:, 0] = True
         csign[k, c:, 1] = False
         v, o = p.ovars.shape
-        ovars[k, :v, :o] = np.asarray(p.ovars)
-        osign[k, :v, :o] = np.asarray(p.osign)
+        ovars[k, :v, :o] = p.ovars
+        osign[k, :v, :o] = p.osign
     return PackedCNF(jnp.asarray(cvars), jnp.asarray(csign),
                      jnp.asarray(ovars), jnp.asarray(osign), V, C)
 
@@ -621,6 +670,8 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
                          near_miss: Optional[dict] = None,
                          on_near_miss=None,
                          engine: Optional[str] = None,
+                         packed: Optional[PackedCNF] = None,
+                         packs: Optional[List[Optional[HostPack]]] = None,
                          ) -> List[Tuple[str, Optional[List[bool]]]]:
     """Batched probSAT across a window of candidate-II CNFs.
 
@@ -650,14 +701,24 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
     status array every few chunks; ``"host"`` is the per-chunk reference
     loop. Both are bit-compatible for a fixed seed;
     ``REPRO_WALKSAT_ENGINE`` overrides the default.
+
+    ``packed`` supplies a ready stacked window pack (used only when every
+    candidate turns out live, i.e. it covers exactly the CNFs walked);
+    ``packs`` supplies per-CNF host packs for the stacker. Both come from
+    the ``SolverSession`` pack cache — a warm sweep leg re-solving an
+    unchanged window skips packing entirely.
     """
     from . import SAT, UNKNOWN, UNSAT
     K = len(cnfs)
     results: List[Tuple[str, Optional[List[bool]]]] = [(UNKNOWN, None)] * K
     live = []
     for i, cnf in enumerate(cnfs):
-        if getattr(cnf, "trivially_unsat", False) or \
-                any(len(c) == 0 for c in cnf.clauses):
+        arena = getattr(cnf, "arena", None)
+        if arena is not None:
+            has_empty = bool((np.diff(arena.offs_view()) == 0).any())
+        else:
+            has_empty = any(len(c) == 0 for c in cnf.clauses)
+        if getattr(cnf, "trivially_unsat", False) or has_empty:
             results[i] = (UNSAT, None)
         elif cnf.n_clauses == 0 or cnf.n_vars == 0:
             results[i] = (SAT, [False] * cnf.n_vars)
@@ -671,7 +732,10 @@ def solve_walksat_window(cnfs: List[CNF], *, seed: int = 0,
         engine = os.environ.get("REPRO_WALKSAT_ENGINE", "device")
     if engine not in ("device", "host"):
         raise ValueError(f"unknown walksat engine {engine!r}")
-    packed = pack_cnf_window([cnfs[i] for i in live])
+    if packed is None or len(live) != K:
+        packed = pack_cnf_window(
+            [cnfs[i] for i in live],
+            [packs[i] for i in live] if packs is not None else None)
     run = _solve_window_device if engine == "device" else _solve_window_host
     return run(cnfs, live, packed, results, seed=seed, steps=steps,
                batch=batch, cb=cb, stop=stop, should_skip=should_skip,
@@ -684,6 +748,7 @@ def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
                   init: Optional[List[bool]] = None,
                   near_miss: Optional[dict] = None,
                   engine: Optional[str] = None,
+                  pack: Optional[HostPack] = None,
                   ) -> Tuple[str, Optional[List[bool]]]:
     """Single-CNF probSAT: the K=1 window. Shares the window engines, the
     bucketed padded pack (consecutive IIs of a sweep — and the incremental
@@ -691,9 +756,11 @@ def solve_walksat(cnf: CNF, *, seed: int = 0, steps: int = 20000,
     the tensor shapes — reuse one XLA compile), and the budget/formula-size
     chunk schedule, so a caller-provided ``steps`` is honoured exactly the
     same way in both entry points. ``near_miss`` receives ``{0: (n_unsat,
-    assignment)}`` when the instance stays unsolved."""
+    assignment)}`` when the instance stays unsolved; ``pack`` supplies a
+    cached :func:`pack_cnf_np` of the CNF."""
     res = solve_walksat_window(
         [cnf], seed=seed, steps=steps, batch=batch, cb=cb, stop=stop,
         inits=[init] if init is not None else None,
-        near_miss=near_miss, engine=engine)
+        near_miss=near_miss, engine=engine,
+        packs=[pack] if pack is not None else None)
     return res[0]

@@ -72,6 +72,20 @@ def main() -> None:
     else:
         check(False, "non-model guard raises under -O")
 
+    # the empty-clause guard in CNF.add must also SURVIVE -O: it used to
+    # be a bare assert, so `python -O` would append an empty clause
+    # WITHOUT setting trivially_unsat — silently corrupting UNSAT
+    # detection downstream (walksat scans for empty clauses, but cold
+    # solvers trust the flag)
+    from repro.core.cnf import EmptyClauseError, IncrementalCNF
+    for ctor in (CNF, IncrementalCNF):
+        try:
+            ctor().add()
+        except EmptyClauseError:
+            check(True, f"{ctor.__name__}.add() raises under -O")
+        else:
+            check(False, f"{ctor.__name__}.add() raises under -O")
+
     print("optimized smoke OK")
 
 

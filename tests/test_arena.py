@@ -1,0 +1,287 @@
+"""Property tests for the flat clause arena.
+
+The arena (``repro.core.cnf.ClauseArena``) replaced the list-of-tuples
+clause store; everything downstream — session signatures, the UNSAT
+registry, WalkSAT packing — keys on the exact clause stream, so the
+arena-backed ``CNF``/``IncrementalCNF`` must round-trip *bit for bit*
+to the legacy view: same clause order, same literals, same selector
+guards, same ``project()`` output. These tests pin that on random
+formulas and on real encoder output, and pin ``pack_cnf_np`` against a
+per-clause reference pack.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:   # optional dep: fall back to the local shim
+    from _propshim import HealthCheck, given, settings, strategies as st
+
+from repro.core import suite
+from repro.core.cgra import CGRA
+from repro.core.cnf import (ClauseArena, CNF, EmptyClauseError,
+                            IncrementalCNF)
+from repro.core.encode import EncoderSession, IncrementalEncoding
+from repro.core.sat.walksat_jax import pack_cnf_np
+
+
+# --------------------------------------------------------------- strategies
+
+@st.composite
+def random_formula(draw):
+    """(n_vars, clauses) with clauses as lists of nonzero lits.
+
+    Allows duplicate literals within a clause and duplicate clauses —
+    the arena must preserve the stream verbatim, not normalise it.
+    """
+    n_vars = draw(st.integers(1, 12))
+    n_clauses = draw(st.integers(0, 25))
+    clauses = []
+    for _ in range(n_clauses):
+        k = draw(st.integers(1, 5))
+        cl = []
+        for _ in range(k):
+            v = draw(st.integers(1, n_vars))
+            cl.append(v if draw(st.booleans()) else -v)
+        clauses.append(cl)
+    return n_vars, clauses
+
+
+def build_cnf(n_vars, clauses, data):
+    """Build a CNF from ``clauses`` choosing randomly, per clause, among
+    the three entry points (``add``, ``add_clause``, ``extend_flat``) —
+    all must yield the same stream."""
+    cnf = CNF()
+    for _ in range(n_vars):
+        cnf.new_var()
+    i = 0
+    while i < len(clauses):
+        how = data.draw(st.integers(0, 2))
+        if how == 0:
+            cnf.add(*clauses[i])
+            i += 1
+        elif how == 1:
+            cnf.add_clause(clauses[i])
+            i += 1
+        else:   # bulk: a run of 1..4 clauses in one extend_flat
+            run = clauses[i:i + data.draw(st.integers(1, 4))]
+            flat = np.asarray([l for c in run for l in c], dtype=np.int32)
+            lens = np.asarray([len(c) for c in run], dtype=np.int64)
+            cnf.extend_flat(flat, lens)
+            i += len(run)
+    return cnf
+
+
+# ------------------------------------------------------- CNF round-tripping
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_formula(), st.data())
+def test_cnf_roundtrips_to_legacy_view(formula, data):
+    n_vars, clauses = formula
+    ref = [tuple(c) for c in clauses]
+    cnf = build_cnf(n_vars, clauses, data)
+
+    # the view IS the legacy list-of-tuples, in order
+    assert list(cnf.clauses) == ref
+    assert len(cnf.clauses) == len(ref)
+    assert cnf.n_clauses == len(ref)
+    if ref:
+        idx = data.draw(st.integers(0, len(ref) - 1))
+        assert cnf.clauses[idx] == ref[idx]
+        assert cnf.clauses[-1] == ref[-1]
+        assert list(cnf.clauses[idx:]) == ref[idx:]
+        assert ref[idx] in cnf.clauses
+    assert (0, 0) not in cnf.clauses
+    assert cnf.clauses == ref
+
+    # CSR invariants: offs monotone, lits[offs[i]:offs[i+1]] == clause i
+    offs = cnf.arena.offs_view()
+    lits = cnf.arena.lits_view()
+    assert offs[0] == 0 and offs[-1] == lits.size
+    assert (np.diff(offs) >= 0).all()
+    for i, c in enumerate(ref):
+        assert tuple(lits[offs[i]:offs[i + 1]]) == c
+
+    # round-trip through from_arrays and copy()
+    rt = ClauseArena.from_arrays(lits, offs)
+    assert list(rt.iter_tuples()) == ref
+    cp = cnf.arena.copy()
+    cp.add((1,))
+    assert list(cnf.clauses) == ref     # copy is independent
+
+    # check() agrees with a naive Python evaluator
+    assign = [data.draw(st.booleans()) for _ in range(n_vars)]
+    naive = all(any(assign[abs(l) - 1] == (l > 0) for l in c) for c in ref)
+    assert cnf.check(assign) == naive
+
+
+def test_empty_clause_semantics():
+    with pytest.raises(EmptyClauseError):
+        CNF().add()
+    with pytest.raises(EmptyClauseError):
+        IncrementalCNF().add()
+    cnf = CNF()
+    cnf.add_clause([])
+    assert cnf.trivially_unsat and list(cnf.clauses) == [()]
+    cnf2 = CNF()
+    cnf2.extend_flat(np.asarray([3], np.int32), np.asarray([1, 0], np.int64))
+    assert cnf2.trivially_unsat and list(cnf2.clauses) == [(3,), ()]
+
+
+def test_at_most_one_pairwise_limit():
+    def pairwise_ref(lits):
+        return [(-lits[i], -lits[j]) for i in range(len(lits))
+                for j in range(i + 1, len(lits))]
+
+    # sequential falls back to pairwise at/below the limit: no fresh vars
+    for k, limit, expect_pairwise in [(4, 4, True), (5, 4, False),
+                                      (5, 8, True), (3, 1, False)]:
+        cnf = CNF()
+        lits = cnf.new_vars(k)
+        cnf.at_most_one(lits, "sequential", pairwise_limit=limit)
+        if expect_pairwise:
+            assert cnf.n_vars == k
+            assert list(cnf.clauses) == pairwise_ref(lits)
+        else:
+            assert cnf.n_vars == k + (k - 1)    # Sinz registers
+            assert cnf.n_clauses == 3 * k - 4
+
+    # large pairwise groups take the vectorised bulk path — same stream
+    cnf = CNF()
+    lits = cnf.new_vars(11)
+    cnf.at_most_one(lits, "pairwise")
+    assert list(cnf.clauses) == pairwise_ref(lits)
+
+
+# ------------------------------------------------- IncrementalCNF layering
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_formula(), st.integers(1, 3), st.data())
+def test_incremental_guards_and_project(formula, n_layers, data):
+    n_vars, base = formula
+    inc = IncrementalCNF()
+    for _ in range(n_vars):
+        inc.new_var()
+    for c in base:
+        inc.add_clause(c)
+
+    layers = {}
+    for key in range(n_layers):
+        sel = inc.begin_layer(key)
+        n_cl = data.draw(st.integers(0, 6))
+        rows = []
+        for _ in range(n_cl):
+            k = data.draw(st.integers(1, 4))
+            rows.append([data.draw(st.integers(1, n_vars))
+                         * (1 if data.draw(st.booleans()) else -1)
+                         for _ in range(k)])
+        # split randomly between per-clause and bulk entry
+        cut = data.draw(st.integers(0, n_cl))
+        for c in rows[:cut]:
+            inc.add_clause(c)
+        tail = rows[cut:]
+        if tail:
+            inc.extend_flat(
+                np.asarray([l for c in tail for l in c], np.int32),
+                np.asarray([len(c) for c in tail], np.int64))
+        inc.end_layer()
+        layers[key] = (sel, rows)
+
+    ref_base = [tuple(c) for c in base]
+    view = list(inc.clauses)
+    assert view[:len(ref_base)] == ref_base
+    pos = len(ref_base)
+    for key in range(n_layers):
+        sel, rows = layers[key]
+        assert inc.selector(key) == sel
+        s, e = inc.layer_slice(key)
+        assert (s, e) == (pos, pos + len(rows))
+        for c in rows:   # every layer clause carries the ¬selector guard
+            assert view[pos] == tuple(c) + (-sel,)
+            pos += 1
+    assert pos == len(view)
+
+    for key in range(n_layers):
+        sel, rows = layers[key]
+        proj = inc.project(key)
+        assert proj.n_vars == inc.n_vars
+        assert list(proj.clauses) == ref_base + [tuple(c) for c in rows]
+        # activating the layer via assumptions names exactly its selector
+        assums = inc.assumptions_for(key)
+        assert assums[0] == sel
+        assert sorted(assums[1:]) == sorted(
+            -layers[k][0] for k in layers if k != key)
+
+
+# -------------------------------------------- real encoder output parity
+
+@pytest.mark.parametrize("name,size,iis", [("srand", (3, 3), (4, 5)),
+                                           ("nw", (4, 4), (3, 4))])
+def test_encoder_streams_match_legacy(name, size, iis):
+    g = suite.get(name)
+    cgra = CGRA(*size)
+    legacy = EncoderSession(g, cgra, emitters="legacy")
+    vector = EncoderSession(g, cgra, emitters="vector")
+    for ii in iis:
+        el, ev = legacy.encode(ii), vector.encode(ii)
+        assert list(el.cnf.clauses) == list(ev.cnf.clauses)
+        assert el.cnf.n_vars == ev.cnf.n_vars
+        assert el.cnf.stats() == ev.cnf.stats()
+
+    il = IncrementalEncoding(legacy)
+    iv = IncrementalEncoding(vector)
+    for ii in iis:
+        il.ensure_ii(ii)
+        iv.ensure_ii(ii)
+        assert list(il.inc.clauses) == list(iv.inc.clauses)
+        pl, pv = il.project(ii), iv.project(ii)
+        assert list(pl.clauses) == list(pv.clauses)
+        # projection matches the cold encode of the same II as a clause
+        # multiset (the incremental build splits C2 fold pairs between
+        # base and layer, so the order differs from the cold stream)
+        cold = vector.encode(ii).cnf
+        assert sorted(pv.clauses) == sorted(cold.clauses)
+        assert pv.n_vars >= cold.n_vars   # selectors on top of the layout
+
+
+# ------------------------------------------------------- pack parity
+
+def _legacy_pack(cnf):
+    """Pre-arena per-clause pack (PR 6), pinned as the oracle."""
+    C, V = cnf.n_clauses, cnf.n_vars
+    lmax = max((len(c) for c in cnf.clauses), default=1) if C else 1
+    lmax = max(lmax, 1)
+    cvars = np.zeros((C, lmax), np.int32)
+    csign = np.zeros((C, lmax), bool)
+    occ = {v: [] for v in range(V + 1)}
+    for i, cl in enumerate(cnf.clauses):
+        for j, lit in enumerate(cl):
+            v = abs(lit)
+            cvars[i, j] = v
+            csign[i, j] = lit > 0
+            occ[v].append((i, lit > 0))
+    omax = max((len(o) for o in occ.values()), default=0)
+    ovars = np.full((V + 1, omax), -1, np.int32)
+    osign = np.zeros((V + 1, omax), bool)
+    for v, entries in occ.items():
+        for j, (ci, sg) in enumerate(entries):
+            ovars[v, j] = ci
+            osign[v, j] = sg
+    return cvars, csign, ovars, osign
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_formula(), st.data())
+def test_pack_matches_legacy(formula, data):
+    n_vars, clauses = formula
+    cnf = build_cnf(n_vars, clauses, data)
+    p = pack_cnf_np(cnf)
+    cv, cs, ov, os_ = _legacy_pack(cnf)
+    np.testing.assert_array_equal(p.cvars, cv)
+    np.testing.assert_array_equal(p.csign, cs)
+    np.testing.assert_array_equal(p.ovars, ov)
+    np.testing.assert_array_equal(p.osign, os_)
+    assert (p.n_vars, p.n_clauses) == (n_vars, len(clauses))

@@ -10,7 +10,7 @@ except ImportError:   # optional dep: fall back to the local shim
 
 from repro.core import suite
 from repro.core.cgra import CGRA
-from repro.core.cnf import CNF, IncrementalCNF
+from repro.core.cnf import CNF, EmptyClauseError, IncrementalCNF
 from repro.core.dfg import DFG, running_example
 from repro.core.encode import EncoderSession, IncrementalEncoding, encode
 from repro.core.mapper import MapperConfig, map_loop
@@ -40,9 +40,12 @@ def test_backends_fail_fast_on_trivially_unsat(method):
     assert solve(cnf, method)[0] == UNSAT
 
 
-def test_add_still_asserts_on_empty():
-    with pytest.raises(AssertionError):
+def test_add_raises_on_empty():
+    # a real exception, not a bare assert: must survive python -O
+    with pytest.raises(EmptyClauseError):
         CNF().add()
+    with pytest.raises(EmptyClauseError):
+        IncrementalCNF().add()
 
 
 # ------------------------------------------------------ IncrementalCNF
