@@ -23,6 +23,8 @@ assumption solve rather than a fresh encode.
 """
 from __future__ import annotations
 
+import struct
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Hashable, Iterable, Iterator, List, Optional, \
     Sequence, Tuple
@@ -40,6 +42,12 @@ class EmptyClauseError(ValueError):
     slip in silently, corrupting UNSAT detection (same failure mode as the
     ``NonModelError`` guard in the walksat layer).
     """
+
+
+class ArenaFormatError(ValueError):
+    """A serialised :class:`ClauseArena` blob failed validation (bad magic,
+    truncation, CRC mismatch, or broken CSR invariants). The disk store
+    treats this as "quarantine the record", never as a crash."""
 
 
 class ClauseArena:
@@ -173,6 +181,65 @@ class ClauseArena:
         out._n = self._n
         out._top = self._top
         return out
+
+    # ------------------------------------------------------- serialisation
+    # Binary layout (little-endian, 8-byte aligned arrays — designed so a
+    # reader holding an mmap of a store file can np.frombuffer the two
+    # array segments without copying):
+    #
+    #   b"CArn" | u32 version | u64 n_clauses | u64 n_lits
+    #   | offs  int64[n_clauses + 1]
+    #   | lits  int32[n_lits]   (+ 4 pad bytes when n_lits is odd)
+    #   | u32 crc32 over everything above
+    _SER_MAGIC = b"CArn"
+    _SER_VERSION = 1
+    _SER_HEAD = struct.Struct("<4sIQQ")
+
+    def to_bytes(self) -> bytes:
+        """Serialise the arena; ``from_bytes`` round-trips stream-exactly
+        (identical ``offs``/``lits`` arrays, hence identical clause
+        stream — empty clauses and guard literals included)."""
+        offs = np.ascontiguousarray(self.offs_view(), dtype="<i8")
+        lits = np.ascontiguousarray(self.lits_view(), dtype="<i4")
+        head = self._SER_HEAD.pack(self._SER_MAGIC, self._SER_VERSION,
+                                   self._n, self._top)
+        pad = b"\x00\x00\x00\x00" if self._top % 2 else b""
+        body = head + offs.tobytes() + lits.tobytes() + pad
+        return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ClauseArena":
+        """Rebuild an arena serialised by :meth:`to_bytes`.
+
+        Raises :class:`ArenaFormatError` on any mismatch — bad magic,
+        truncation, CRC failure, or violated CSR invariants — so a store
+        reading a corrupted record can quarantine it instead of crashing
+        (or worse, silently adopting a garbled clause stream)."""
+        data = bytes(data)
+        head_n = cls._SER_HEAD.size
+        if len(data) < head_n + 4:
+            raise ArenaFormatError("arena blob truncated (header)")
+        magic, version, n, top = cls._SER_HEAD.unpack_from(data)
+        if magic != cls._SER_MAGIC:
+            raise ArenaFormatError("bad arena magic")
+        if version != cls._SER_VERSION:
+            raise ArenaFormatError(f"unsupported arena version {version}")
+        pad = 4 if top % 2 else 0
+        need = head_n + 8 * (n + 1) + 4 * top + pad + 4
+        if len(data) != need:
+            raise ArenaFormatError(
+                f"arena blob length {len(data)} != expected {need}")
+        crc = struct.unpack_from("<I", data, need - 4)[0]
+        if zlib.crc32(data[:need - 4]) & 0xFFFFFFFF != crc:
+            raise ArenaFormatError("arena CRC mismatch")
+        offs = np.frombuffer(data, dtype="<i8", count=n + 1, offset=head_n)
+        lits = np.frombuffer(data, dtype="<i4", count=top,
+                             offset=head_n + 8 * (n + 1))
+        if n < 0 or top < 0 or offs.size == 0 or offs[0] != 0 \
+                or int(offs[-1]) != top or (np.diff(offs) < 0).any():
+            raise ArenaFormatError("arena CSR invariants violated")
+        return cls.from_arrays(lits.astype(np.int32),
+                               offs.astype(np.int64))
 
 
 class _ClausesView:

@@ -60,6 +60,13 @@ class DFG:
     def __init__(self, name: str = "dfg"):
         self.name = name
         self.nodes: Dict[int, Node] = {}
+        # memoized canonical signatures (see repro.core.service): computed
+        # from scratch they walk every node and edge, which dominates the
+        # cache-lookup path of a hot mapping service. Any structural
+        # mutation must invalidate — add() does so itself; direct edits of
+        # ``node.ins`` (back-edge patching, route splicing) must call
+        # ``touch()``.
+        self._sig_cache: Dict[Tuple, Tuple] = {}
 
     # ---------------------------------------------------------------- build
     def add(self, op: str, ins: Sequence[Tuple[int, int]] = (), imm: int = 0,
@@ -71,7 +78,19 @@ class DFG:
             if dist < 0:
                 raise ValueError("negative edge distance")
         self.nodes[nid] = Node(nid, op, tuple(tuple(e) for e in ins), imm, name)
+        self._sig_cache.clear()
         return nid
+
+    def touch(self) -> None:
+        """Invalidate memoized signatures after in-place node mutation."""
+        self._sig_cache.clear()
+
+    def __deepcopy__(self, memo):
+        import copy as _copy
+        g = DFG(self.name)
+        memo[id(self)] = g
+        g.nodes = _copy.deepcopy(self.nodes, memo)
+        return g   # fresh empty _sig_cache: copies are usually mutated next
 
     # --------------------------------------------------------------- views
     @property
@@ -204,5 +223,6 @@ def running_example() -> DFG:
     n9 = g.add("mul", [(n8, 0), (n8, 0)], name="n9")   # paper node 9
     # loop-carried: node 10 also accumulates node 11 from previous iteration
     g.nodes[n10].ins = ((n1, 0), (n11, 1))
+    g.touch()
     g.validate()
     return g

@@ -147,6 +147,7 @@ def trace_loop_body(fn: Callable, n_carry: int = 0, loads: int = 0,
         ins = list(g.nodes[nid].ins)
         ins[slot] = (carry_map[ci], 1)
         g.nodes[nid].ins = tuple(ins)
+        g.touch()
     # stores for non-carry outputs
     for si, nid in enumerate(out_nodes[n_carry:]):
         if nid < 0:

@@ -231,6 +231,7 @@ def _insert_route(dfg: DFG, edge: Tuple[int, int, int]) -> DFG:
         else:
             new_ins.append((src, dist))
     node.ins = tuple(new_ins)
+    g.touch()
     return g
 
 

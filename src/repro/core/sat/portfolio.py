@@ -42,6 +42,7 @@ import os
 import threading
 import time
 import warnings
+from collections import OrderedDict
 from concurrent.futures import (FIRST_COMPLETED, ProcessPoolExecutor,
                                 ThreadPoolExecutor, wait as futures_wait)
 from dataclasses import dataclass
@@ -49,9 +50,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+# jax is imported lazily inside the functions that touch it: the serving
+# tier forks worker processes off modules that import this file, and a
+# child forked after the parent initialised XLA inherits its runtime locks
+# (the classic fork-after-jax deadlock). Keeping the module import jax-free
+# lets `core.workers` fork clean solver processes; only the walksat/
+# portfolio legs — which the cdcl/z3 worker paths never enter — pay the
+# deferred import.
 
 from ..cnf import CNF
 
@@ -134,6 +139,7 @@ def solve_portfolio(cnf: CNF, *, seed: int = 0, steps: int = 8192,
     (same model every run — jax PRNG is seed-deterministic) or the complete
     leg decides; there is no wall-clock race in this single-instance path.
     """
+    import jax
     from . import SAT, UNKNOWN
     from .walksat_jax import solve_walksat
     from . import solve as solve_any
@@ -207,6 +213,7 @@ class SolverSession:
         # solve_portfolio() for portfolio) so incremental and cold runs of
         # the same kernel share the probSAT XLA compile cache
         if method == "portfolio":
+            import jax
             self.walksat_steps = walksat_steps or 8192
             self.walksat_batch = walksat_batch or 32 * jax.device_count()
         else:
@@ -232,10 +239,16 @@ class SolverSession:
         # dense-pack caches for the walksat legs: per-II host packs and the
         # last stacked window pack, both keyed on the projection's identity
         # (arena literal count, n_vars) — the formula is append-only, so an
-        # unchanged (length, vars) pair means an unchanged clause stream
-        self._pack_np: Dict[int, Tuple[Tuple[int, int], object]] = {}
+        # unchanged (length, vars) pair means an unchanged clause stream.
+        # The per-II cache is LRU-bounded (``max_cached_packs``): a serving
+        # process sweeps many IIs through one session, and each pack holds
+        # dense O(clauses x max_len) tensors
+        self._pack_np: "OrderedDict[int, Tuple[Tuple[int, int], object]]" \
+            = OrderedDict()
         self._pack_window: Optional[Tuple[tuple, object]] = None
+        self.max_cached_packs = 16
         self.pack_reuses = 0                  # cache hits across all legs
+        self.pack_evictions = 0               # LRU drops from the pack cache
 
     # ------------------------------------------------------------- formula
     def ensure_ii(self, ii: int) -> None:
@@ -259,10 +272,15 @@ class SolverSession:
         key = (cnf.arena.n_lits, cnf.n_vars)
         hit = self._pack_np.get(ii)
         if hit is not None and hit[0] == key:
+            self._pack_np.move_to_end(ii)
             self.pack_reuses += 1
             return hit[1], True
         pack = pack_cnf_np(cnf)
         self._pack_np[ii] = (key, pack)
+        self._pack_np.move_to_end(ii)
+        while len(self._pack_np) > self.max_cached_packs:
+            self._pack_np.popitem(last=False)
+            self.pack_evictions += 1
         return pack, False
 
     def packed_window(self, iis: List[int], cnfs: List[CNF],
@@ -423,6 +441,29 @@ class SolverSession:
                 self.best_quality = n_unsat
                 if n_unsat > 0:
                     self.near_miss_updates += 1
+
+    def warm_snapshot(self) -> Optional[List[bool]]:
+        """Locked copy of the current best assignment (service-side read
+        for near-shape admission)."""
+        with self._best_lock:
+            return None if self.best_assign is None \
+                else list(self.best_assign)
+
+    def adopt_warm(self, assign: List[bool]) -> None:
+        """Seed the warm-start state from a *different* session's best
+        assignment (near-shape admission): purely heuristic — WalkSAT
+        restarts and CDCL phases start there, but no clauses, cores, or
+        learnt facts transfer, so soundness is untouched. The donor's
+        assignment is truncated/padded to this session's base variables
+        and stored as a worst-quality near-miss, so any genuine model or
+        near-miss this session produces immediately replaces it."""
+        nv = self.enc.inc.n_base_vars or self.enc.inc.n_vars
+        a = [bool(x) for x in assign[:nv]]
+        a += [False] * (nv - len(a))
+        with self._best_lock:
+            if self.best_assign is None:
+                self.best_assign = a
+                self.best_quality = 1 << 30
 
     def phase_hint(self) -> Optional[List[bool]]:
         """The session's best assignment (model or near-miss) as a CDCL
@@ -850,9 +891,11 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
 
 
 def sharded_chain_batch(n_vars: int, chains_per_device: int, seed: int,
-                        mesh: Mesh, axis: str = "data") -> jnp.ndarray:
+                        mesh: "Mesh", axis: str = "data") -> "jnp.ndarray":
     """Device-sharded initial assignments for the portfolio: [D*B, V+1] bool
     sharded over ``axis``. Used by launch-time portfolio runs on a pod."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
     n_dev = mesh.shape[axis]
     total = n_dev * chains_per_device
     key = jax.random.PRNGKey(seed)

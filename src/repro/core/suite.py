@@ -74,6 +74,7 @@ def _carry(g: DFG, nid: int, src: int, slot: int = 0, dist: int = 1) -> None:
     ins = list(g.nodes[nid].ins)
     ins[slot] = (src, dist)
     g.nodes[nid].ins = tuple(ins)
+    g.touch()
 
 
 @register

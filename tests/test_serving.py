@@ -1,0 +1,272 @@
+"""Serving tier: shared disk store behind the service, near-shape warm
+admission, the multi-process worker pool (inline mode in-process), the
+async batched front door, signature memoization, and thread-safety of the
+shared :class:`MappingService` under concurrent hammering."""
+import asyncio
+import copy
+import threading
+
+import pytest
+
+from repro.core import suite
+from repro.core.cgra import CGRA
+from repro.core.encode import EncoderSession
+from repro.core.mapper import MapperConfig
+from repro.core.sat.portfolio import SolverSession
+from repro.core.service import (MappingService, dfg_signature,
+                                near_shape_key, shape_signature)
+from repro.core.simulator import verify_mapping
+from repro.core.store import MappingStore
+from repro.core.workers import WorkerPool
+from repro.launch.serve import CompileFrontDoor, DeadlineExceeded
+
+CFG = MapperConfig(solver="auto", timeout_s=90)
+
+
+def _near_variant(g):
+    """One rewired edge: same node/edge counts, kinds, and distance set
+    (same lattice bucket), different exact wiring (different shape)."""
+    g2 = copy.deepcopy(g)
+    for nid in sorted(g2.nodes):
+        ins = g2.nodes[nid].ins
+        if (len(ins) == 2 and ins[0][1] == 0 and ins[1][1] == 0
+                and ins[0][0] != ins[1][0]):
+            g2.nodes[nid].ins = ((ins[0][0], 0), (ins[0][0], 0))
+            g2.touch()
+            g2.validate()
+            return g2
+    raise AssertionError("kernel has no rewireable two-input node")
+
+
+# ------------------------------------------------- signature memoization
+
+def test_signature_memoized_on_instance_and_invalidated_on_mutation():
+    g = suite.get("sha")
+    assert g._sig_cache == {}
+    s1 = dfg_signature(g)
+    assert g._sig_cache                       # populated by the first call
+    # memo hit: the cached object itself is returned
+    assert dfg_signature(g) is s1
+    sh1 = shape_signature(g)
+    cgra = CGRA(3, 3)
+    sh_arch = shape_signature(g, cgra)
+    assert shape_signature(g) is sh1          # arch=None and arch=cgra are
+    assert shape_signature(g, cgra) is sh_arch   # separate memo keys
+    # structural mutation clears the memo and changes the signature
+    g.add("add", [(0, 0), (0, 0)])
+    assert g._sig_cache == {}
+    assert dfg_signature(g) != s1
+    # in-place edits go through touch()
+    g2 = suite.get("sha")
+    dfg_signature(g2)
+    g2.touch()
+    assert g2._sig_cache == {}
+
+
+def test_deepcopy_does_not_share_memo():
+    g = suite.get("gsm")
+    dfg_signature(g)
+    g2 = copy.deepcopy(g)
+    assert g2._sig_cache == {}
+    assert dfg_signature(g2) == dfg_signature(g)
+
+
+# --------------------------------------------------- near-shape lattice
+
+def test_near_shape_key_buckets_variants_together():
+    g = suite.get("sha")
+    gv = _near_variant(g)
+    assert shape_signature(g) != shape_signature(gv)
+    assert near_shape_key(shape_signature(g), 1) \
+        == near_shape_key(shape_signature(gv), 1)
+    other = suite.get("gsm")
+    assert near_shape_key(shape_signature(g), 1) \
+        != near_shape_key(shape_signature(other), 1)
+
+
+def test_service_near_shape_admission_seeds_fresh_session():
+    svc = MappingService(near_delta=1)
+    cgra = CGRA(3, 3)
+    g = suite.get("sha")
+    r1 = svc.map(g, cgra, CFG)
+    assert r1.success and not r1.service.near_seeded
+    gv = _near_variant(g)
+    r2 = svc.map(gv, cgra, CFG)
+    assert r2.success
+    assert r2.service.near_seeded
+    assert svc.stats.near_hits == 1
+    # admission is heuristic only — the mapping must still verify
+    assert verify_mapping(r2.dfg, cgra, r2.placement, r2.ii, n_iters=5).ok
+    # near_delta=0 disables the lattice entirely
+    svc0 = MappingService(near_delta=0)
+    svc0.map(g, cgra, CFG)
+    svc0.map(gv, cgra, CFG)
+    assert svc0.stats.near_hits == 0
+
+
+# ------------------------------------------------------- disk-tier service
+
+def test_service_disk_tier_restart_hits_and_core_preload(tmp_path):
+    path = str(tmp_path / "store")
+    cgra = CGRA(3, 3)
+    g = suite.get("sha")
+    svc1 = MappingService(store=MappingStore(path))
+    r_cold = svc1.map(g, cgra, CFG)
+    assert r_cold.success and r_cold.service.via == "cold"
+    assert svc1.stats.disk_writes == 1
+    had_unsat = any(a.status == "UNSAT" for a in r_cold.attempts)
+
+    # a fresh service (≈ restarted process) over the same store directory
+    svc2 = MappingService(store=MappingStore(path))
+    r_disk = svc2.map(g, cgra, CFG)
+    assert r_disk.service.via == "disk"
+    assert svc2.stats.disk_hits == 1
+    assert (r_disk.ii, r_disk.placement) == (r_cold.ii, r_cold.placement)
+
+    # forcing a re-solve builds a session that preloads the persisted
+    # cores and prunes the proven-UNSAT IIs without solving them
+    r_resolve = svc2.map(g, cgra, CFG, use_cache=False)
+    assert r_resolve.success and r_resolve.ii == r_cold.ii
+    if had_unsat:
+        assert svc2.stats.cores_preloaded > 0
+        assert r_resolve.service.iis_pruned > 0
+        assert all(a.via == "core" for a in r_resolve.attempts
+                   if a.status == "UNSAT")
+
+
+# ------------------------------------------------ concurrent service hammer
+
+def test_service_concurrent_hammer_is_consistent():
+    """Many threads, few kernels: the RLock'd pool/cache/stats must stay
+    consistent and every thread must see the same verified results."""
+    svc = MappingService()
+    cgra = CGRA(3, 3)
+    kernels = [suite.get("sha"), suite.get("gsm")]
+    n_threads, per_thread = 8, 4
+    results, errors = [], []
+
+    def worker(t):
+        try:
+            for i in range(per_thread):
+                g = kernels[(t + i) % len(kernels)]
+                results.append((g.name, svc.map(g, cgra, CFG)))
+        except Exception as e:          # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    assert len(results) == n_threads * per_thread
+    assert svc.stats.requests == n_threads * per_thread
+    # every request for one kernel agrees on the result
+    by_kernel = {}
+    for name, r in results:
+        assert r.success
+        by_kernel.setdefault(name, set()).add(
+            (r.ii, tuple(sorted(r.placement.items()))))
+    assert all(len(v) == 1 for v in by_kernel.values())
+    # concurrent first requests may each miss the cache before the first
+    # solve lands (they serialise on the session lock and agree on the
+    # result), but at most one miss per (thread, kernel) is possible and
+    # the pool must hold exactly one session per shape
+    assert svc.stats.cache_hits >= n_threads * per_thread \
+        - n_threads * len(kernels)
+    assert svc.stats.sessions_created == len(kernels)
+
+
+# ------------------------------------------------------ pack-cache bounding
+
+def test_session_pack_cache_lru_bounded_and_counted():
+    g = suite.get("sha")
+    sess = SolverSession(EncoderSession(g, CGRA(3, 3), CFG.amo),
+                         method="cdcl", seed=7)
+    sess.max_cached_packs = 2
+    for ii in range(3, 8):
+        sess.ensure_ii(ii)
+        sess.host_pack(ii)
+    assert len(sess._pack_np) == 2
+    assert sess.pack_evictions == 3
+    # the LRU survivor is a hit, the evicted II repacks
+    _, reused = sess.host_pack(7)
+    assert reused and sess.pack_reuses >= 1
+    _, reused = sess.host_pack(3)
+    assert not reused
+    # the counter is surfaced through the service stats snapshot
+    snap = MappingService().stats.snapshot()
+    assert "pack_evictions" in snap and "pack_reuses" in snap
+
+
+# ------------------------------------------------------------- worker pool
+
+def test_worker_pool_inline_routes_and_aggregates(tmp_path):
+    cgra = CGRA(3, 3)
+    kernels = [suite.get(n) for n in ("sha", "gsm", "srand")]
+    with WorkerPool(workers=2, store_path=str(tmp_path / "store"),
+                    inline=True) as pool:
+        shards = {pool.shard_of(g, cgra, CFG) for g in kernels}
+        assert shards <= {0, 1}
+        futs = [pool.submit(g, cgra, CFG) for g in kernels]
+        res = [f.result(timeout=120) for f in futs]
+        assert all(r.success for r in res)
+        # affinity is stable: the same request routes to the same shard
+        assert pool.shard_of(kernels[0], cgra, CFG) \
+            == pool.shard_of(kernels[0], cgra, CFG)
+        again = pool.map(kernels[0], cgra, CFG)
+        assert again.service.via == "cache"
+        st = pool.stats()
+        assert st["requests"] == 4 and st["inline"]
+        assert st["n_workers"] == 2 and len(st["shards"]) == 1
+
+
+# ------------------------------------------------------------- front door
+
+def test_front_door_coalesces_and_matches_direct(tmp_path):
+    cgra = CGRA(3, 3)
+    g = suite.get("srand")
+    gother = suite.get("bitcount")
+
+    async def drive():
+        with WorkerPool(workers=2, store_path=str(tmp_path / "store"),
+                        inline=True) as pool:
+            async with CompileFrontDoor(pool, window_ms=20,
+                                        max_batch=64) as door:
+                res = await asyncio.gather(*(
+                    [door.compile(g, cgra, CFG) for _ in range(12)]
+                    + [door.compile(gother, cgra, CFG)]))
+                stats = door.stats.snapshot()
+        return res, stats
+
+    res, stats = asyncio.run(drive())
+    assert all(r.success for r in res)
+    assert len({(r.ii, tuple(sorted(r.placement.items())))
+                for r in res[:12]}) == 1
+    assert stats["submitted"] == stats["served"] == 13
+    assert stats["coalesced"] >= 1 and stats["failed"] == 0
+    # the served result equals the direct in-process reference
+    from repro.core.mapper import map_loop
+    ref = map_loop(g, cgra, CFG)
+    assert (res[0].ii, res[0].placement) == (ref.ii, ref.placement)
+
+
+def test_front_door_enforces_deadlines():
+    cgra = CGRA(3, 3)
+    g = suite.get("nw")
+
+    async def drive():
+        with WorkerPool(workers=1, inline=True) as pool:
+            async with CompileFrontDoor(pool) as door:
+                with pytest.raises(DeadlineExceeded):
+                    await door.compile(g, cgra, CFG, deadline_s=1e-4)
+                # a sane deadline still serves (the in-flight solve from
+                # the expired request keeps warming the shard)
+                r = await door.compile(g, cgra, CFG, deadline_s=120)
+                return r, door.stats.snapshot()
+
+    r, stats = asyncio.run(drive())
+    assert r.success
+    assert stats["deadline_violations"] == 1
+    assert stats["served"] == 1
