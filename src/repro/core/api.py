@@ -66,6 +66,7 @@ class MapRequest:
     timeout_s: Optional[float] = None
     routing: Optional[bool] = None
     max_ii: Optional[int] = None
+    guide: Optional[str] = None   # learned II guidance (name or .npz path)
 
     def resolved_arch(self) -> Union[CGRA, ArchSpec]:
         if isinstance(self.arch, str):
@@ -78,7 +79,8 @@ class MapRequest:
     def resolved_config(self) -> MapperConfig:
         cfg = self.config or MapperConfig()
         overrides = {k: getattr(self, k)
-                     for k in ("solver", "timeout_s", "routing", "max_ii")
+                     for k in ("solver", "timeout_s", "routing", "max_ii",
+                               "guide")
                      if getattr(self, k) is not None}
         return replace(cfg, **overrides) if overrides else cfg
 

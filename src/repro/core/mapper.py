@@ -57,6 +57,13 @@ class MapperConfig:
     # flipped racer wins). CDCL sessions only; staged like the WalkSAT
     # racer so easy windows never pay for it.
     race_flip: bool = True
+    # learned II guidance (repro.core.guide): a registered guide name or
+    # an .npz checkpoint path. Sweep-only and *sound* — the prediction
+    # chooses window extents (how many candidate IIs encode/race per
+    # round), never which IIs are tried: the guided final II is identical
+    # to the unguided one on every input. A string (not a guide object) so
+    # configs stay hashable for the service cache and the store key.
+    guide: Optional[str] = None
 
 
 @dataclass
@@ -105,6 +112,15 @@ class MappingResult:
     # per-request reuse statistics when the request was served by a
     # MappingService (repro.core.service.RequestStats); None otherwise
     service: Optional[object] = None
+    # structured, machine-readable warnings (each {"kind": ..., ...}):
+    # e.g. routing retries silently forcing the sequential engine. Read
+    # with getattr(res, "warnings", []) when results may come from old
+    # pickled store records that predate the field.
+    warnings: List[Dict] = field(default_factory=list)
+    # what the learned guide (cfg.guide) predicted and how the sweep used
+    # it ({"guide", "offset", "order", "hopeless", "used"}); None when the
+    # request ran unguided
+    guidance: Optional[Dict] = None
 
     @property
     def n_route_nodes(self) -> int:
@@ -274,6 +290,19 @@ def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
         from .sweep import map_sweep   # local import: sweep imports us
         return map_sweep(dfg, cgra, cfg, sweep_width=sweep_width,
                          session=session)
+    warnings: List[Dict] = []
+    if sweep_width > 1 and cfg.routing:
+        # routing retries splice route nodes into the DFG mid-II, which
+        # serialises the search — the parallel sweep cannot honour them.
+        # This used to silently downgrade to the sequential engine; keep
+        # the (correct) downgrade but say so in the result.
+        warnings.append({
+            "kind": "routing_forces_sequential",
+            "requested_sweep_width": sweep_width,
+            "effective_sweep_width": 1,
+            "detail": "cfg.routing=True is sequential-only; the request "
+                      "ran the Fig. 3 loop instead of the parallel sweep",
+        })
     dfg.validate()
     t_start = time.time()
     deadline = t_start + cfg.timeout_s
@@ -283,9 +312,11 @@ def map_loop(dfg: DFG, cgra: CGRA, cfg: MapperConfig | None = None,
         # structural infeasibility (op class with zero capable PEs): a
         # structured verdict instead of a 17-attempt doomed sweep
         return MappingResult(success=False, cgra=cgra, infeasible=str(e),
-                             total_time=time.time() - t_start)
+                             total_time=time.time() - t_start,
+                             warnings=warnings)
     max_ii = cfg.max_ii if cfg.max_ii is not None else mii + 16
-    res = MappingResult(success=False, mii=mii, cgra=cgra)
+    res = MappingResult(success=False, mii=mii, cgra=cgra,
+                        warnings=warnings)
 
     # the persistent incremental core: one layered formula + live solver
     # for the whole loop. Routing retries splice nodes into the DFG (a

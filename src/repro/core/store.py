@@ -69,6 +69,51 @@ class StoreCorruption(Exception):
     """Internal scan verdict: complete-but-invalid bytes in the log."""
 
 
+# ------------------------------------------------------------- log framing
+# The record framing is shared infrastructure: MappingStore's WAL and the
+# campaign dataset shards (repro.core.campaign) are both sequences of these
+# frames, so torn-tail tolerance and CRC screening behave identically in
+# every log this repo writes.
+
+
+def write_framed(f, rtype: int, key: bytes, payload: bytes) -> int:
+    """Append one framed record (header + payload + 8-byte-alignment pad)
+    to an open binary file; returns the number of bytes written."""
+    head = _HEAD.pack(_MAGIC, rtype, key, len(payload),
+                      crc32(payload) & 0xFFFFFFFF)
+    pad = b"\x00" * ((-len(payload)) % 8)
+    f.write(head + payload + pad)
+    return len(head) + len(payload) + len(pad)
+
+
+def iter_framed(path: str, start: int = 0):
+    """Yield ``(rtype, key, payload, record_off, end_off)`` for every
+    complete record in ``[start, EOF)``. A torn tail (partial header or
+    payload — a writer died mid-append) ends iteration silently; the
+    caller detects it by comparing the last ``end_off`` against the file
+    size. Complete-but-invalid bytes raise :class:`StoreCorruption`."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        f.seek(start)
+        pos = start
+        while pos + _HEAD.size <= size:
+            head = f.read(_HEAD.size)
+            if len(head) < _HEAD.size:
+                break                              # torn header
+            magic, rtype, key, plen, crc = _HEAD.unpack(head)
+            if magic != _MAGIC:
+                raise StoreCorruption(f"bad record magic at {pos}")
+            padded = plen + (-plen) % 8
+            if pos + _HEAD.size + padded > size:
+                break                              # torn payload
+            payload = f.read(padded)[:plen]
+            if crc32(payload) & 0xFFFFFFFF != crc:
+                raise StoreCorruption(f"payload CRC mismatch at {pos}")
+            end = pos + _HEAD.size + padded
+            yield rtype, key, payload, pos, end
+            pos = end
+
+
 def canonical_bytes(obj) -> bytes:
     """Deterministic byte encoding of the nested-tuple cache keys.
 
@@ -115,6 +160,7 @@ class StoreStats:
     torn_tail_truncated: int = 0
     quarantined: int = 0
     write_errors: int = 0
+    compactions: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -189,28 +235,15 @@ class MappingStore:
             self._scanned = max(self._scanned, size if start <= size
                                 else self._scanned)
             return
-        with open(self.log_path, "rb") as f:
-            f.seek(start)
-            pos = start
-            while pos + _HEAD.size <= size:
-                head = f.read(_HEAD.size)
-                if len(head) < _HEAD.size:
-                    break                              # torn header
-                magic, rtype, key, plen, crc = _HEAD.unpack(head)
-                if magic != _MAGIC:
-                    raise StoreCorruption(f"bad record magic at {pos}")
-                padded = plen + (-plen) % 8
-                if pos + _HEAD.size + padded > size:
-                    break                              # torn payload
-                payload = f.read(padded)[:plen]
-                if crc32(payload) & 0xFFFFFFFF != crc:
-                    raise StoreCorruption(f"payload CRC mismatch at {pos}")
-                self._index_record(rtype, key, pos + _HEAD.size, plen,
-                                   payload)
-                pos += _HEAD.size + padded
-            if pos < size:
-                self.stats.torn_tail_truncated += 1
-            self._scanned = pos
+        pos = start
+        for rtype, key, payload, off, end in iter_framed(self.log_path,
+                                                         start):
+            self._index_record(rtype, key, off + _HEAD.size, len(payload),
+                               payload)
+            pos = end
+        if pos < size:
+            self.stats.torn_tail_truncated += 1
+        self._scanned = pos
 
     def _quarantine(self) -> None:
         """Move the corrupt log aside and restart empty (service keeps
@@ -245,9 +278,6 @@ class MappingStore:
     def _append(self, rtype: int, key: bytes, payload: bytes) -> bool:
         if self.readonly:
             return False
-        head = _HEAD.pack(_MAGIC, rtype, key, len(payload),
-                          crc32(payload) & 0xFFFFFFFF)
-        pad = b"\x00" * ((-len(payload)) % 8)
         with self._lock:
             try:
                 with self._flock(exclusive=True):
@@ -262,13 +292,13 @@ class MappingStore:
                         f.truncate(self._scanned)
                         f.seek(self._scanned)
                         off = self._scanned + _HEAD.size
-                        f.write(head + payload + pad)
+                        written = write_framed(f, rtype, key, payload)
                         f.flush()
                         if self.fsync:
                             os.fsync(f.fileno())
                     self._index_record(rtype, key, off, len(payload),
                                        payload)
-                    self._scanned += _HEAD.size + len(payload) + len(pad)
+                    self._scanned += written
                 return True
             except OSError:
                 self.stats.write_errors += 1
@@ -409,6 +439,70 @@ class MappingStore:
             return int(n_vars), ClauseArena.from_bytes(payload[8:])
         except ArenaFormatError:
             return None
+
+    # ---------------------------------------------------------- compaction
+    def compact(self) -> Dict[str, int]:
+        """Rewrite the append-only log keeping only *live* records: the
+        latest mapping and arena per key and the latest core per
+        (session key, II). Long campaigns overwrite the same cells over
+        and over, and an append-only WAL grows without bound — compaction
+        reclaims the dead versions while preserving every current
+        ``key -> value`` lookup bit-for-bit (witness blobs included; their
+        offsets are re-derived by the post-rewrite rescan).
+
+        The rewrite goes to a temp file in the store directory and lands
+        via ``os.replace`` under the exclusive cross-process lock, so
+        concurrent readers either see the old log or the complete new one,
+        never a half-written hybrid. A log that scans corrupt is
+        quarantined exactly as ``refresh`` would have done. Returns
+        ``{bytes_before, bytes_after, records_kept, records_dropped}``."""
+        out = {"bytes_before": 0, "bytes_after": 0, "records_kept": 0,
+               "records_dropped": 0}
+        if self.readonly:
+            return out
+        with self._lock:
+            try:
+                with self._flock(exclusive=True):
+                    out["bytes_before"] = os.path.getsize(self.log_path)
+                    # one full scan collecting the latest raw payload per
+                    # live key (insertion order = first-write order, so the
+                    # compacted log keeps a stable, deterministic layout)
+                    live: "Dict[Tuple, Tuple[int, bytes, bytes]]" = {}
+                    total = 0
+                    try:
+                        for rtype, key, payload, _off, _end in iter_framed(
+                                self.log_path):
+                            total += 1
+                            if rtype == RT_CORE:
+                                ii = _CORE_HEAD.unpack_from(payload)[0]
+                                dedup = (rtype, key, ii)
+                            else:
+                                dedup = (rtype, key)
+                            live[dedup] = (rtype, key, payload)
+                    except StoreCorruption:
+                        self._quarantine()
+                        return out
+                    tmp = self.log_path + f".compact-{os.getpid()}"
+                    with open(tmp, "wb") as f:
+                        for rtype, key, payload in live.values():
+                            write_framed(f, rtype, key, payload)
+                        f.flush()
+                        os.fsync(f.fileno())
+                    os.replace(tmp, self.log_path)
+                    # drop the stale index (every payload offset moved) and
+                    # rebuild from the compacted log
+                    self._mappings.clear()
+                    self._arenas.clear()
+                    self._cores.clear()
+                    self._scanned = 0
+                    self._scan_from(0)
+                    self.stats.compactions += 1
+                    out["bytes_after"] = os.path.getsize(self.log_path)
+                    out["records_kept"] = len(live)
+                    out["records_dropped"] = total - len(live)
+            except OSError:
+                self.stats.write_errors += 1
+        return out
 
     # ---------------------------------------------------------- inspection
     def describe(self) -> Dict[str, int]:

@@ -112,6 +112,11 @@ def main() -> None:
     ap.add_argument("--sweep", type=int, default=0, metavar="K",
                     help="also run the parallel II-sweep engine with window "
                          "width K and report both modes side-by-side")
+    ap.add_argument("--guide", default=None, metavar="NAME_OR_NPZ",
+                    help="learned II guidance for the sweep runs: a "
+                         "registered guide name or an .npz checkpoint from "
+                         "repro.launch.campaign (window seeding only — "
+                         "never changes the final II)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     cgra = arch(args.cgra, regs=args.regs, mem=args.mem, mul=args.mul)
@@ -161,9 +166,14 @@ def main() -> None:
             rs = compile_request(MapRequest(
                 dfg=g2, arch=cgra, config=MapperConfig(
                     solver="auto", timeout_s=60, amo=args.amo,
-                    incremental=not args.cold), sweep_width=args.sweep))
+                    incremental=not args.cold, guide=args.guide),
+                sweep_width=args.sweep))
             sstat = f"II={rs.ii}" if rs.success else "NO MAPPING"
             line += f"  | sweep(k={args.sweep}) {sstat} [{rs.total_time:.2f}s]"
+            guid = getattr(rs, "guidance", None)
+            if guid and guid.get("used"):
+                line += (f" [guide offset={guid['offset']}"
+                         f" spans={guid['spans']}]")
             if rs.success and r.success and rs.ii != r.ii:
                 line += "  !! sweep/sequential II mismatch"
         print(line)

@@ -218,11 +218,15 @@ class CompileFrontDoor:
                 p.future.set_result(res)
 
 
-def offload_report(cfg, cgra_name: str) -> None:
+def offload_report(cfg, cgra_name: str, guide: Optional[str] = None,
+                   sweep_width: int = 1) -> None:
     """Map the arch's offloadable inner loops via the shared service —
     one ``compile(MapRequest(...))`` per loop, ``service="default"``
     resolving to the same process-wide pool every driver shares. The
-    fabric name takes the full grammar (``4x4``, ``4x4-torus:r8``, ...)."""
+    fabric name takes the full grammar (``4x4``, ``4x4-torus:r8``, ...).
+    ``guide`` (a registered guide name or campaign ``.npz`` checkpoint)
+    seeds the sweep windows when ``sweep_width > 1`` — learned guidance
+    never changes the final II, only where the sweep starts looking."""
     from ..core.api import MapRequest, compile as compile_request
     from ..core.arch import arch
     from ..core.frontend import trace_loop_body
@@ -230,15 +234,20 @@ def offload_report(cfg, cgra_name: str) -> None:
     from .map_cgra import loops_for
 
     fabric = arch(cgra_name)
-    print(f"CGRA offload ({fabric}) via MappingService:")
+    mode = f", guided sweep k={sweep_width}" if guide else ""
+    print(f"CGRA offload ({fabric}) via MappingService{mode}:")
     for name, fn, n_carry, loads in loops_for(cfg):
         g, _ = trace_loop_body(fn, n_carry=n_carry, loads=loads, name=name)
         r = compile_request(MapRequest(dfg=g, arch=fabric, timeout_s=60,
-                                       service="default"))
+                                       service="default", guide=guide,
+                                       sweep_width=sweep_width))
         status = f"II={r.ii}" if r.success else "NO MAPPING"
+        guid = getattr(r, "guidance", None)
+        gtxt = (f" guide_offset={guid['offset']}"
+                if guid and guid.get("used") else "")
         print(f"  {name:16s} {status} via={r.service.via} "
               f"pruned={r.service.iis_pruned} "
-              f"[{r.service.request_time*1e3:.1f}ms]")
+              f"[{r.service.request_time*1e3:.1f}ms]{gtxt}")
     print(f"  service: {get_service().describe()}")
 
 
@@ -260,11 +269,17 @@ def main() -> None:
                     help="also map this arch's scalar inner loops onto a "
                          "CGRA sidecar (e.g. 4x4) through the shared "
                          "MappingService before serving")
+    ap.add_argument("--offload-guide", default=None, metavar="NAME_OR_NPZ",
+                    help="learned II guidance for the offload mappings (a "
+                         "registered guide name or a repro.launch.campaign "
+                         ".npz checkpoint); implies a sweep_width=4 guided "
+                         "sweep per loop, final IIs unchanged by contract")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.offload_cgra:
-        offload_report(cfg, args.offload_cgra)
+        offload_report(cfg, args.offload_cgra, guide=args.offload_guide,
+                       sweep_width=4 if args.offload_guide else 1)
     if args.smoke:
         cfg = cfg.smoke()
     mesh = make_host_mesh()

@@ -1,0 +1,243 @@
+"""Mapping-campaign engine: corpus determinism, isomorphism dedup,
+feature contract, sharded dataset durability, and the campaign driver."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:
+    from _propshim import HealthCheck, given, settings, strategies as st
+
+from repro.core import suite
+from repro.core.arch import arch
+from repro.core.campaign import (CampaignDataset, CellRecord, CorpusSpec,
+                                 N_FEATURES, build_corpus, canonical_dfg,
+                                 canonical_key, cell_features, corpus_digest,
+                                 mutate_dfg, random_dfg, run_campaign)
+from repro.core.dfg import running_example
+from repro.core.mapper import MapperConfig
+from repro.core.service import dfg_signature
+from repro.core.workers import WorkerPool
+
+SMALL = CorpusSpec(seed=3, n_random=6, n_mutants=4, include_suite=False,
+                   min_nodes=5, max_nodes=9)
+
+
+# ----------------------------------------------------------- determinism
+
+def test_corpus_same_seed_same_digest_across_hash_seeds():
+    """The corpus (and its canonical keys) must be byte-identical in any
+    process — no ``hash()``/set-order dependence — so two campaign drivers
+    with the same spec always agree on cell identity."""
+    prog = ("import sys; sys.path.insert(0, 'src')\n"
+            "from repro.core.campaign import (CorpusSpec, build_corpus, "
+            "corpus_digest)\n"
+            "spec = CorpusSpec(seed=3, n_random=6, n_mutants=4, "
+            "include_suite=False, min_nodes=5, max_nodes=9)\n"
+            "items, _ = build_corpus(spec)\n"
+            "print(corpus_digest(items))\n")
+    digests = set()
+    for hashseed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed,
+                   JAX_PLATFORMS="cpu")
+        out = subprocess.run([sys.executable, "-c", prog],
+                             capture_output=True, text=True, env=env,
+                             cwd=os.path.dirname(os.path.dirname(
+                                 os.path.abspath(__file__))))
+        assert out.returncode == 0, out.stderr
+        digests.add(out.stdout.strip())
+    assert len(digests) == 1
+    items, _ = build_corpus(SMALL)
+    assert corpus_digest(items) == digests.pop()
+
+
+def test_random_dfg_validates_and_executes():
+    import random
+    rng = random.Random(11)
+    for i in range(10):
+        g = random_dfg(rng, SMALL, f"g{i}")
+        g.validate()
+        hist, _mem = g.execute(3)
+        assert len(hist) == 3
+
+
+# ----------------------------------------------------------------- dedup
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.sampled_from(suite.names()), st.integers(0, 10_000))
+def test_relabel_mutants_collapse_to_one_canonical_key(name, seed):
+    """Any node-id permutation of a DFG is the *same* corpus entry: its
+    canonical key (and the canonical form itself) is permutation-
+    invariant."""
+    import random
+    g = suite.get(name)
+    mut, kind = mutate_dfg(g, random.Random(seed), kind="relabel")
+    assert kind == "relabel"
+    assert canonical_key(mut) == canonical_key(g)
+    assert dfg_signature(canonical_dfg(mut)) == \
+        dfg_signature(canonical_dfg(g))
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(0, 10_000), st.integers(0, 10_000))
+def test_relabel_collapse_on_random_dfgs(gen_seed, perm_seed):
+    import random
+    g = random_dfg(random.Random(gen_seed), SMALL)
+    mut, _ = mutate_dfg(g, random.Random(perm_seed), kind="relabel")
+    assert canonical_key(mut) == canonical_key(g)
+
+
+def test_semantic_mutations_change_the_key():
+    """Non-relabel mutations are meant to produce *new* corpus entries
+    (an op swap / imm perturbation is a different kernel)."""
+    import random
+    g = suite.get("sha")
+    for kind, seed in (("op", 1), ("imm", 2), ("grow", 3)):
+        mut, _ = mutate_dfg(g, random.Random(seed), kind=kind)
+        assert canonical_key(mut) != canonical_key(g), kind
+
+
+def test_build_corpus_reports_dedup():
+    spec = CorpusSpec(seed=0, n_random=12, n_mutants=24,
+                      include_suite=True, min_nodes=5, max_nodes=9)
+    items, stats = build_corpus(spec)
+    assert stats["unique"] == len(items)
+    assert stats["generated"] == stats["unique"] + stats["duplicates"]
+    # relabel mutants collapse onto parents, so dedup fires in practice
+    assert stats["duplicates"] > 0
+    assert len({it.key for it in items}) == len(items)
+
+
+# -------------------------------------------------------------- features
+
+def test_cell_features_shape_and_finiteness():
+    for fabric in (arch("2x2"), arch("4x4-torus:r8"), arch("3x3-onehop")):
+        f = cell_features(running_example(), fabric)
+        assert f.shape == (N_FEATURES,)
+        assert f.dtype == np.float32
+        assert np.all(np.isfinite(f))
+
+
+def test_cell_features_see_the_fabric():
+    g = suite.get("gsm")
+    a = cell_features(g, arch("2x2"))
+    b = cell_features(g, arch("4x4"))
+    assert not np.array_equal(a, b)
+
+
+# --------------------------------------------------------------- dataset
+
+def _mk_cell(key_byte: int, ii=4, witness=None) -> CellRecord:
+    key = bytes([key_byte]) + bytes(31)
+    return CellRecord(
+        key=key, dfg_key=bytes(32), name=f"c{key_byte}", kind="random",
+        fabric="2x2", n_nodes=7,
+        features=np.full(N_FEATURES, float(key_byte), dtype=np.float32),
+        mii=2, ii=ii, success=ii is not None, infeasible=False,
+        attempts=((2, "UNSAT", "cdcl", 0.01), (ii or 9, "SAT", "walksat",
+                                               0.02)),
+        total_time=0.05, witness=witness)
+
+
+def test_dataset_roundtrip_and_sharding(tmp_path):
+    ds = CampaignDataset(str(tmp_path / "cells"), n_shards=3)
+    recs = [_mk_cell(b, witness=b"\x01\x02" if b % 2 else None)
+            for b in range(17)]
+    for r in recs:
+        ds.append(r)
+    got = {r.key: r for r in ds}
+    assert len(got) == len(recs)
+    for r in recs:
+        back = got[r.key]
+        assert back.offset == r.ii - r.mii
+        assert back.attempts == r.attempts
+        assert back.witness == r.witness
+        assert np.array_equal(back.features, r.features)
+    d = ds.describe()
+    assert d["cells"] == len(recs) and d["corrupt_shards"] == 0
+    # keys really spread over shards
+    used = [s for s in range(3) if os.path.exists(ds.shard_path(s))]
+    assert len(used) > 1
+
+
+def test_dataset_tolerates_torn_tail_and_corrupt_shard(tmp_path):
+    ds = CampaignDataset(str(tmp_path / "cells"), n_shards=2)
+    for b in range(8):
+        ds.append(_mk_cell(b))
+    n = ds.count()
+    # torn tail on shard 0: a half-written frame is invisible
+    with open(ds.shard_path(0), "ab") as f:
+        f.write(b"\x00" * 11)
+    assert ds.count() == n
+    # flipped byte inside shard 1: that shard stops early but the reader
+    # survives and reports it
+    with open(ds.shard_path(1), "r+b") as f:
+        f.seek(60)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    survivors = list(ds)
+    assert ds.corrupt_shards >= 1
+    assert 0 < len(survivors) < n
+
+
+# -------------------------------------------------------------- campaign
+
+def test_run_campaign_inline_pool_smoke(tmp_path):
+    items, _ = build_corpus(CorpusSpec(seed=5, n_random=4, n_mutants=0,
+                                       include_suite=False,
+                                       min_nodes=5, max_nodes=7))
+    fabrics = [arch("2x2"), arch("3x3")]
+    ds = CampaignDataset(str(tmp_path / "cells"), n_shards=2)
+    with WorkerPool(workers=0, store_path=str(tmp_path / "store")) as pool:
+        stats, recs = run_campaign(items, fabrics, pool, dataset=ds,
+                                   cfg=MapperConfig(timeout_s=30.0))
+    assert stats.cells == len(items) * len(fabrics)
+    assert stats.errors == 0
+    assert stats.mapped + stats.failed + stats.infeasible == stats.cells
+    assert stats.mapped > 0
+    assert ds.count() == stats.cells
+    for rec in recs:
+        if rec.success:
+            assert rec.ii is not None and rec.ii >= rec.mii
+            assert any(st_ == "SAT" for _ii, st_, _via, _s in rec.attempts)
+        if rec.witness is not None:
+            # the witness re-solves to the recorded UNSAT-at-MII verdict
+            from repro.core.sat import UNSAT, solve_cnf
+            from repro.core.sat.cnf import CNF
+            from repro.core.arena import ClauseArena
+            cnf = CNF.__new__(CNF)
+            cnf.arena = ClauseArena.from_bytes(rec.witness)
+            assert solve_cnf(cnf, method="cdcl").status == UNSAT
+
+
+def test_run_campaign_records_structural_infeasibility(tmp_path):
+    """A cell whose fabric lacks an op class entirely never reaches the
+    pool but still lands in the dataset (labelled infeasible)."""
+    from repro.core.campaign import CorpusItem
+    from repro.core.dfg import DFG
+    g = DFG("dot")                       # needs a multiplier somewhere
+    iv = g.add("iv", name="i")
+    c = g.add("const", imm=3)
+    m = g.add("mul", [(iv, 0), (c, 0)])
+    g.add("add", [(m, 0), (c, 0)])
+    items = [CorpusItem(name="dot", dfg=g, key=canonical_key(g),
+                        kind="suite")]
+    fabric = arch("2x2", mul="none")
+    ds = CampaignDataset(str(tmp_path / "cells"))
+
+    class NoPool:                        # submit() must never be called
+        def submit(self, *a, **kw):
+            raise AssertionError("infeasible cell hit the pool")
+
+    stats, recs = run_campaign(items, [fabric], NoPool(), dataset=ds)
+    assert stats.cells == stats.infeasible == 1
+    assert recs[0].infeasible and not recs[0].success
+    assert recs[0].ii is None
+    assert ds.count() == 1

@@ -165,6 +165,25 @@ def test_map_loop_routing_keeps_sequential_path():
     assert r.success and r.ii == 3
 
 
+def test_map_loop_routing_downgrade_is_a_structured_warning():
+    """routing=True cannot run the parallel sweep; the downgrade to the
+    sequential path must be *reported*, not silent — and only when a
+    wider sweep was actually requested."""
+    g = running_example()
+    r = map_loop(g, CGRA(2, 2), MapperConfig(solver="auto", routing=True),
+                 sweep_width=4)
+    assert len(r.warnings) == 1
+    w = r.warnings[0]
+    assert w["kind"] == "routing_forces_sequential"
+    assert w["requested_sweep_width"] == 4
+    assert w["effective_sweep_width"] == 1
+    # no warning when nothing was downgraded
+    for cfg, width in ((MapperConfig(solver="auto", routing=True), 1),
+                       (MapperConfig(solver="auto"), 4)):
+        assert map_loop(running_example(), CGRA(2, 2), cfg,
+                        sweep_width=width).warnings == []
+
+
 # ----------------------------------------------------------------- determinism
 def test_portfolio_fixed_seed_is_deterministic():
     """The per-instance portfolio (walksat then complete fallback) must give
