@@ -506,6 +506,17 @@ def main(quick: bool = False, amo: str = "pairwise",
         if agg_e < 1.5:
             bad.append(f"aggregate encode speedup {agg_e:.2f}x < 1.5x "
                        "vs the pinned legacy emitters")
+        # static gate: the emitted encodings must audit clean (family
+        # counts on the analytic formulas, no unsuppressed redundancy)
+        from repro.analysis import audit_suite
+        audit_reports = audit_suite(names=names, amo=amo)
+        audit_bad = [r for r in audit_reports if not r.ok()]
+        if audit_bad:
+            bad.append("CNF audit unclean on "
+                       + ", ".join(f"{r.cell}[{r.mode}]"
+                                   for r in audit_bad))
+        else:
+            print(f"cnf audit OK ({len(audit_reports)} reports)")
         if bad:
             raise SystemExit("fig6 --check failed: " + "; ".join(bad))
         print("fig6 --check OK")

@@ -7,13 +7,13 @@ from typing import Dict, List
 
 
 def load(path: str) -> List[Dict]:
-    rows = []
     seen = {}
-    for line in open(path):
-        r = json.loads(line)
-        # keep the LAST record per cell (reruns supersede)
-        seen[(r["arch"], r["shape"], r["mesh"],
-              json.dumps(r.get("overrides")))] = r
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            # keep the LAST record per cell (reruns supersede)
+            seen[(r["arch"], r["shape"], r["mesh"],
+                  json.dumps(r.get("overrides")))] = r
     return list(seen.values())
 
 

@@ -1,0 +1,28 @@
+"""Static analysis for the mapper stack: `python -m repro.analysis`.
+
+Two engines, one gate:
+
+* :mod:`repro.analysis.cnf_audit` — a vectorised numpy auditor for the
+  emitted SAT encodings: duplicate / subsumed / tautological clauses,
+  dead or out-of-range variables, AMO-family completeness and overlap,
+  and per-family clause counts cross-checked against closed-form
+  formulas re-derived from the KMS windows (an independent model of the
+  encoder, not a call back into it).
+* :mod:`repro.analysis.lint` — an AST / import-graph rule engine for the
+  repo's load-bearing invariants: fork-clean worker imports,
+  ``python -O`` assert safety, ``PYTHONHASHSEED``-independent canonical
+  keys, and Pallas kernel constraints. Legacy violations live in a
+  checked-in baseline file; anything new fails the gate.
+
+CLI: ``python -m repro.analysis --check`` (lint gate),
+``--audit`` (33-cell suite encoding audit), ``--write-baseline``.
+"""
+from .cnf_audit import (AuditError, AuditReport, Finding, audit_encoding,
+                        audit_projection, audit_suite)
+from .lint import LintConfig, LintFinding, load_baseline, run_lint
+
+__all__ = [
+    "AuditError", "AuditReport", "Finding", "audit_encoding",
+    "audit_projection", "audit_suite",
+    "LintConfig", "LintFinding", "load_baseline", "run_lint",
+]

@@ -1,0 +1,68 @@
+"""fork-safety: worker shard entrypoints must have a jax-free import chain.
+
+``core/workers.py`` forks solver shards with ``multiprocessing``; a
+module-scope ``jax``/``jaxlib``/``optax`` import anywhere in its import
+closure would initialise XLA in the parent and fork a corrupted runtime
+into every shard (see the fork-safety note in ``core/sat/portfolio.py``).
+This rule walks the *module-scope* import graph (imports inside function
+bodies are post-fork by construction and therefore fine) from every
+entry module — any module whose last dotted component matches
+``config.fork_entry_suffixes`` — and reports each edge through which a
+forbidden root becomes reachable, with the offending chain.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from ..lint import LintContext, LintFinding
+
+NAME = "fork-safety"
+
+
+def _resolve_internal(ctx: LintContext, name: str) -> Optional[str]:
+    """Longest known module prefix of ``name``, if any."""
+    parts = name.split(".")
+    for k in range(len(parts), 0, -1):
+        cand = ".".join(parts[:k])
+        if cand in ctx.modules:
+            return cand
+    return None
+
+
+def check(ctx: LintContext) -> Iterable[LintFinding]:
+    cfg = ctx.config
+    entries = [m for m in sorted(ctx.modules)
+               if m.split(".")[-1] in cfg.fork_entry_suffixes]
+    for entry in entries:
+        # BFS over module-scope imports, remembering how we got there
+        parent: Dict[str, Tuple[str, int]] = {}  # module -> (importer, line)
+        queue: List[str] = [entry]
+        visited = {entry}
+        while queue:
+            mod = queue.pop(0)
+            for imp, lineno in ctx.module_scope_imports.get(mod, ()):
+                root = imp.split(".")[0]
+                if root in cfg.fork_forbidden_roots:
+                    chain = _chain(entry, mod, parent)
+                    rel = ctx.modules[mod]
+                    yield LintFinding(
+                        rule=NAME, path=rel, line=lineno,
+                        token=f"{mod}->{root}",
+                        message=(f"module-scope `{imp}` import reachable "
+                                 f"from fork entry `{entry}` via "
+                                 f"{' -> '.join(chain)}"),
+                    )
+                    continue
+                internal = _resolve_internal(ctx, imp)
+                if internal and internal not in visited:
+                    visited.add(internal)
+                    parent[internal] = (mod, lineno)
+                    queue.append(internal)
+
+
+def _chain(entry: str, mod: str, parent: Dict[str, Tuple[str, int]]
+           ) -> List[str]:
+    chain = [mod]
+    while chain[-1] != entry and chain[-1] in parent:
+        chain.append(parent[chain[-1]][0])
+    return list(reversed(chain))

@@ -1,0 +1,74 @@
+"""pallas-constraints: kernel files keep static shapes and stay off f64.
+
+The accelerator kernels (``kernels/*/kernel.py`` and their jit'd
+``ops.py`` drivers) run under ``jax.jit`` / Pallas, where:
+
+* output shapes must be static — ``nonzero``/``flatnonzero``/
+  ``unique``/``compress``/``extract`` and one-argument ``where`` have
+  data-dependent output shapes and fail (or silently fall back) under
+  tracing;
+* ``float64`` is unavailable on the target and double-precision
+  constants silently downcast (or upcast the whole kernel when x64 is
+  force-enabled), so any ``float64`` mention is a bug.
+
+The float64 check applies to every file under the kernels tree
+(including ``ref.py`` — references must compare in the dtype the kernel
+actually uses); the dynamic-shape checks bind only to
+``config.pallas_shape_files`` since host-side reference code may use
+numpy's dynamic ops freely.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..lint import LintContext, LintFinding
+from ._util import snippet
+
+NAME = "pallas-constraints"
+
+_DYN_SHAPE = {"nonzero", "flatnonzero", "unique", "compress", "extract",
+              "argwhere"}
+_F64_ATTRS = {"float64", "double", "complex128"}
+
+
+def check(ctx: LintContext) -> Iterable[LintFinding]:
+    cfg = ctx.config
+    for rel, pf in sorted(ctx.files.items()):
+        if cfg.pallas_path_fragment not in rel:
+            continue
+        shape_scope = rel.rsplit("/", 1)[-1] in cfg.pallas_shape_files
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Attribute) and node.attr in _F64_ATTRS:
+                yield LintFinding(
+                    rule=NAME, path=rel, line=node.lineno,
+                    token=f"f64:{node.attr}",
+                    message=f"`{snippet(node)}`: float64/double is "
+                            f"unavailable in kernels",
+                )
+            elif (isinstance(node, ast.Constant)
+                  and node.value in ("float64", "complex128")):
+                yield LintFinding(
+                    rule=NAME, path=rel, line=node.lineno,
+                    token=f"f64:{node.value}",
+                    message=f"dtype string {node.value!r} in kernel file",
+                )
+            elif shape_scope and isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute):
+                attr = node.func.attr
+                if attr in _DYN_SHAPE:
+                    yield LintFinding(
+                        rule=NAME, path=rel, line=node.lineno,
+                        token=f"dyn:{attr}",
+                        message=f"`{snippet(node)}`: data-dependent "
+                                f"output shape is not traceable",
+                    )
+                elif (attr == "where" and len(node.args) == 1
+                      and not node.keywords):
+                    yield LintFinding(
+                        rule=NAME, path=rel, line=node.lineno,
+                        token="dyn:where1",
+                        message=f"one-argument `where` "
+                                f"(`{snippet(node)}`) has data-dependent "
+                                f"shape; use the three-argument form",
+                    )

@@ -157,7 +157,9 @@ def canonical_dfg(dfg: DFG, budget: int = 128) -> DFG:
             search(_refine_colors(dfg, forced, out_edges))
 
     search(base)
-    assert best[0] is not None
+    if best[0] is None:
+        raise RuntimeError("canonical_dfg: refinement search exhausted its "
+                           "budget without producing a labelling")
     return _relabel_nodes(dfg, best[0][1])
 
 
@@ -472,7 +474,10 @@ def cell_features(dfg: DFG, fabric) -> np.ndarray:
         float(lat_max),
     ]
     out = np.asarray(feats, dtype=np.float32)
-    assert out.shape == (N_FEATURES,), out.shape
+    if out.shape != (N_FEATURES,):
+        raise ValueError(f"cell feature vector has shape {out.shape}, "
+                         f"expected ({N_FEATURES},) — keep N_FEATURES in "
+                         f"sync with the feats list")
     return out
 
 

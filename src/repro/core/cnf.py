@@ -174,6 +174,24 @@ class ClauseArena:
     def max_var(self) -> int:
         return int(np.abs(self.lits_view()).max()) if self._top else 0
 
+    def padded_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Audit hook: the clause stream as one dense ``[n_clauses, Lmax]``
+        int64 matrix (rows zero-padded on the right — 0 is never a
+        literal) plus the per-row lengths. This is the whole-arena view
+        the static CNF auditor (``repro.analysis.cnf_audit``) vectorises
+        over: row-wise sorts, uniqueness, and membership tests become
+        single numpy ops instead of per-clause Python loops."""
+        lens = self.lens()
+        n = self._n
+        if n == 0:
+            return np.zeros((0, 0), dtype=np.int64), lens
+        lmax = int(lens.max()) if lens.size else 0
+        pad = np.zeros((n, lmax), dtype=np.int64)
+        rows = np.repeat(np.arange(n), lens)
+        cols = np.arange(self._top) - np.repeat(self.offs_view()[:-1], lens)
+        pad[rows, cols] = self.lits_view()
+        return pad, lens
+
     def copy(self) -> "ClauseArena":
         out = ClauseArena.__new__(ClauseArena)
         out._lits = self._lits[:self._top].copy()
@@ -583,6 +601,19 @@ class IncrementalCNF(CNF):
     def layer_slice(self, key: Hashable) -> Tuple[int, int]:
         lay = self._layers[key]
         return lay.start, lay.end
+
+    def layer_var_ranges(self) -> Dict[Hashable, Tuple[int, int, int]]:
+        """Audit hook: ``{key: (selector, var_start, var_end)}`` per layer.
+
+        A layer's variables are its selector (allocated first, so
+        ``selector == var_start``) plus any aux vars created while it was
+        open — the full range is ``var_start <= v <= var_end``.
+        ``project(other_key)`` strips this layer's clauses
+        entirely, so these variables legitimately occur in no clause of
+        the projection — the CNF auditor uses this map to tell that
+        expected deadness apart from a genuinely dangling variable."""
+        return {k: (lay.selector, lay.var_start, lay.var_end)
+                for k, lay in self._layers.items()}
 
     def project(self, key: Hashable) -> CNF:
         """Plain CNF equivalent to base + layer ``key`` (guards stripped).

@@ -127,6 +127,12 @@ class Encoding:
         self.cgra = cgra
         self.dfg = dfg
         self.stats: Dict[str, int] = stats or {}
+        # audit metadata: family -> [start, end) clause-index range in the
+        # arena, filled by EncoderSession.encode(). ``stats`` keeps the
+        # historical counters ("c2" = fold + write-port combined); the
+        # ranges split C2W out so repro.analysis.cnf_audit can slice each
+        # family and cross-check it against its closed-form clause count.
+        self.families: Dict[str, Tuple[int, int]] = {}
         self._kms = kms
         self._var_of = var_of
         self._info = info
@@ -605,6 +611,7 @@ class EncoderSession:
             for group in self.c2_fold_groups(ii):
                 lits = [v for key in group for v in lay.by_pt[key]]
                 cnf.at_most_one(lits, self.amo)
+        c2w_start = cnf.n_clauses
         # write-port conflicts between mixed-latency nodes (empty on
         # unit-latency fabrics), counted with C2 as resource conflicts
         if mode == "vector":
@@ -626,6 +633,10 @@ class EncoderSession:
                        layout=lay, ii=ii, lat=self.lat)
         enc.stats = {"vars": cnf.n_vars, "clauses": cnf.n_clauses,
                      "c1": n_c1, "c2": n_c2, "c3": n_c3}
+        c3_start = cnf.n_clauses - n_c3
+        enc.families = {"c1": (0, n_c1), "c2": (n_c1, c2w_start),
+                        "c2w": (c2w_start, c3_start),
+                        "c3": (c3_start, cnf.n_clauses)}
         return enc
 
 
@@ -680,6 +691,13 @@ class IncrementalEncoding:
         inc.extend_flat(*_concat(flats, lens))
         self.inc = inc
         self.n_base = inc.n_clauses
+        # audit metadata: clause-index ranges of the base families and —
+        # per encoded layer — of each II-dependent family, mirroring
+        # Encoding.families on the cold path. "c2s" is the within-slot C2
+        # skeleton (base), "c2" the per-II cross-time fold delta.
+        self.base_families: Dict[str, Tuple[int, int]] = {
+            "c1": (0, self.n_c1), "c2s": (self.n_c1, self.n_base)}
+        self.layer_families: Dict[Hashable, Dict[str, Tuple[int, int]]] = {}
         # per-II projection memo: layers are immutable once encoded, so a
         # projection only changes when n_vars has grown (new layers add
         # selector/aux vars and project() stamps the current n_vars)
@@ -717,18 +735,25 @@ class IncrementalEncoding:
                     # helper clauses
                     lits = [v for key in group for v in lay.by_pt[key]]
                     inc.at_most_one(lits, session.amo)
+        c2w_start = inc.n_clauses
         # write-port conflicts between mixed-latency nodes — same family
         # as the cold encoder (empty on unit-latency fabrics); then C3
         # timing windows for this II, clauses guarded by the layer selector
         if mode == "vector":
             inc.extend_flat(*session._c2w_flat(ii))
+            c3_start = inc.n_clauses
             inc.extend_flat(*session._c3_flat(ii))
         else:
             for cl in session.c2w_clauses(ii):
                 inc.add_clause(cl)
+            c3_start = inc.n_clauses
             for cl in session.c3_clauses(ii):
                 inc.add_clause(cl)
         inc.end_layer()
+        start, end = inc.layer_slice(ii)
+        self.layer_families[ii] = {"c2": (start, c2w_start),
+                                   "c2w": (c2w_start, c3_start),
+                                   "c3": (c3_start, end)}
         return sel
 
     # -------------------------------------------------------------- queries
@@ -754,6 +779,19 @@ class IncrementalEncoding:
     def stats_for(self, ii: int) -> Dict[str, int]:
         self.ensure_ii(ii)
         return self.inc.layer_stats(ii)
+
+    def projection_families(self, ii: int) -> Dict[str, Tuple[int, int]]:
+        """Audit metadata: family -> [start, end) clause-index ranges in
+        ``project(ii)``'s clause stream (base families first, then the
+        layer's families shifted to follow them — exactly how
+        ``IncrementalCNF.project`` lays the rows out)."""
+        self.ensure_ii(ii)
+        fams = dict(self.base_families)
+        start, _ = self.inc.layer_slice(ii)
+        shift = self.n_base - start
+        for fam, (a, b) in self.layer_families[ii].items():
+            fams[fam] = (a + shift, b + shift)
+        return fams
 
     def decode(self, ii: int, model: Sequence[bool],
                ) -> Dict[int, Tuple[int, int, int]]:

@@ -776,7 +776,7 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
             hint = session.phase_hint() if method == "cdcl" else None
             status, model, st = session.solve_complete(
                 iis[i],
-                stop=lambda: stops[i].is_set() or past_deadline(),
+                stop=lambda i=i: stops[i].is_set() or past_deadline(),
                 phase_hint=hint)
             if status == UNKNOWN and (stops[i].is_set() or past_deadline()):
                 continue   # cancelled / timed out; filled in at the end
@@ -788,7 +788,8 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
                 if still_open and not stops[i].is_set():
                     status, model, st = session.solve_complete(
                         iis[i],
-                        stop=lambda: stops[i].is_set() or past_deadline())
+                        stop=lambda i=i: (stops[i].is_set()
+                                          or past_deadline()))
                     if status == UNKNOWN and (stops[i].is_set()
                                               or past_deadline()):
                         continue
@@ -816,7 +817,7 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
             solver = CDCLSolver(cnfs[i])
             status, model = solver.solve(
                 phase_hint=[True] * cnfs[i].n_vars,
-                stop=lambda: stops[i].is_set() or past_deadline())
+                stop=lambda i=i: stops[i].is_set() or past_deadline())
             if status not in (_SAT, _UNSAT):
                 continue
             st = SolveStats(via="cdcl-flip",
@@ -830,8 +831,9 @@ def solve_window(cnfs: List[CNF], *, method: str = "auto", seed: int = 0,
 
     flip_thread: Optional[threading.Thread] = None
     if complete and session is not None:
-        assert iis is not None and len(iis) == K, \
-            "session window solving needs the candidate IIs"
+        if iis is None or len(iis) != K:
+            raise ValueError("session window solving needs one candidate "
+                             f"II per CNF: got {iis!r} for {K} window(s)")
         _start_racer()
         if race_flip and method == "cdcl" and K:
             flip_thread = threading.Thread(target=run_flip_leg,

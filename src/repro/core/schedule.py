@@ -124,10 +124,7 @@ def _rec_mii_feasible(nodes, edges, lat: Dict[int, int], ii: int) -> bool:
                 changed = True
         if not changed:
             return True
-    for s, t, dd in edges:
-        if d[s] + lat[s] - dd * ii > d[t]:
-            return False
-    return True
+    return all(d[s] + lat[s] - dd * ii <= d[t] for s, t, dd in edges)
 
 
 def rec_mii(dfg: DFG, lat: Optional[Dict[int, int]] = None,

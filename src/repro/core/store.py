@@ -199,7 +199,8 @@ class MappingStore:
         self._cores: Dict[bytes, Dict[int, _CoreRec]] = {}
         self._scanned = 0          # bytes of the log already indexed
         if not os.path.exists(self.log_path) and not readonly:
-            open(self.log_path, "ab").close()
+            with open(self.log_path, "ab"):
+                pass
         self.refresh()
 
     # ------------------------------------------------------------ locking
@@ -259,7 +260,8 @@ class MappingStore:
         self._scanned = 0
         self.stats.quarantined += 1
         if not self.readonly:
-            open(self.log_path, "ab").close()
+            with open(self.log_path, "ab"):
+                pass
 
     def refresh(self) -> None:
         """Index any records other writers appended since the last scan."""

@@ -52,16 +52,22 @@ def _worker_init(store_path: Optional[str], near_delta: int,
                                  near_delta=near_delta)
 
 
+def _svc() -> MappingService:
+    # real raise, not assert: shard entrypoints must guard under -O too
+    if _WORKER_SVC is None:
+        raise RuntimeError("worker not initialised: _worker_init() did not "
+                           "run in this process")
+    return _WORKER_SVC
+
+
 def _worker_map(dfg: DFG, cgra: CGRA, cfg: MapperConfig, sweep_width: int,
                 use_cache: bool) -> MappingResult:
-    assert _WORKER_SVC is not None, "worker not initialised"
-    return _WORKER_SVC.map(dfg, cgra, cfg, sweep_width=sweep_width,
-                           use_cache=use_cache)
+    return _svc().map(dfg, cgra, cfg, sweep_width=sweep_width,
+                      use_cache=use_cache)
 
 
 def _worker_stats() -> Dict:
-    assert _WORKER_SVC is not None, "worker not initialised"
-    return _WORKER_SVC.describe()
+    return _svc().describe()
 
 
 # ------------------------------------------------------------------ pool

@@ -33,6 +33,16 @@ def flip_update(assign: jnp.ndarray, tc: jnp.ndarray, v_flip: jnp.ndarray,
     interpret = resolve_interpret(interpret)
     k, b, v1 = assign.shape
     c = tc.shape[2]
+    # shapes are static under jit, so this contract check runs at trace
+    # time and survives `python -O` (a real raise, not an assert)
+    leads = {"tc": tc.shape[:2], "v_flip": v_flip.shape[:2],
+             "occ_c": occ_c.shape[:2], "occ_s": occ_s.shape[:2],
+             "new_val": new_val.shape[:2]}
+    bad = {n: s for n, s in leads.items() if tuple(s) != (k, b)}
+    if bad or occ_c.shape != occ_s.shape:
+        raise ValueError(f"flip_update: inputs must share leading [K,B]="
+                         f"[{k},{b}] and occ_c/occ_s must match: "
+                         f"mismatched {bad or {'occ_s': occ_s.shape}}")
     bp = _pad_to(max(b, 1), block_b)
     cp = _pad_to(max(c, 1), block_c)
     a8 = jnp.pad(assign.astype(jnp.int8), ((0, 0), (0, bp - b), (0, 0)))

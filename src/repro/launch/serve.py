@@ -126,7 +126,9 @@ class CompileFrontDoor:
         :class:`DeadlineExceeded`)."""
         from ..core.mapper import MapperConfig
         from ..core.service import dfg_signature, topology_signature
-        assert self._queue is not None, "front door not started"
+        if self._queue is None:
+            raise RuntimeError("front door not started: call start() "
+                               "before compile()")
         cfg = cfg or MapperConfig()
         deadline = time.monotonic() + (deadline_s
                                        if deadline_s is not None

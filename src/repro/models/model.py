@@ -301,7 +301,7 @@ class LM:
         else:
             aux = jnp.zeros((), jnp.float32)
             for i in range(cfg.n_layers):
-                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                lp = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
                 x, aux = blk((x, aux), lp)
         return x, aux
 
@@ -451,8 +451,8 @@ class LM:
         else:
             outs = []
             for i in range(cfg.n_layers):
-                lp = jax.tree.map(lambda a: a[i], params["blocks"])
-                lc = jax.tree.map(lambda a: a[i], cache)
+                lp = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+                lc = jax.tree.map(lambda a, i=i: a[i], cache)
                 x, nlc = blk(x, (lp, lc))
                 outs.append(nlc)
             new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
@@ -506,7 +506,7 @@ class LM:
             outs = []
             aux = jnp.zeros((), jnp.float32)
             for i in range(cfg.n_layers):
-                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                lp = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
                 (x, aux), ys = blk((x, aux), lp)
                 outs.append(ys)
             per_layer = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)

@@ -1,0 +1,2 @@
+"""BAD: module-scope jax import, two hops from the fork entrypoint."""
+import jax  # noqa: F401

@@ -1,0 +1,2 @@
+"""Fork entrypoint: its module-scope import closure reaches jax."""
+from .middle import something  # noqa: F401

@@ -1,0 +1,6 @@
+"""GOOD: the jax import lives inside a function — post-fork by construction."""
+
+
+def run_on_device(x):
+    import jax.numpy as jnp
+    return jnp.asarray(x)

@@ -1,0 +1,2 @@
+"""Fork entrypoint with a jax-free module-scope closure."""
+from .lazy import run_on_device  # noqa: F401

@@ -1,0 +1,6 @@
+"""BAD: runtime guard as a bare assert — vanishes under python -O."""
+
+
+def take(queue):
+    assert queue is not None, "queue not started"
+    return queue.pop()

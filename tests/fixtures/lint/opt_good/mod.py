@@ -1,0 +1,7 @@
+"""GOOD: runtime guard as a real raise — survives python -O."""
+
+
+def take(queue):
+    if queue is None:
+        raise RuntimeError("queue not started")
+    return queue.pop()

@@ -1,0 +1,9 @@
+"""BAD kernel file: data-dependent shapes and float64."""
+import jax.numpy as jnp
+
+
+def body(x):
+    idx = jnp.nonzero(x)
+    pos = jnp.where(x > 0)
+    acc = x.astype(jnp.float64)
+    return idx, pos, acc

@@ -1,0 +1,8 @@
+"""GOOD kernel file: static shapes, f32 throughout, 3-arg where."""
+import jax.numpy as jnp
+
+
+def body(x):
+    mask = x > 0
+    acc = jnp.where(mask, x, 0.0).astype(jnp.float32)
+    return jnp.sum(acc)

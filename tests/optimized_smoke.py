@@ -86,6 +86,46 @@ def main() -> None:
         else:
             check(False, f"{ctor.__name__}.add() raises under -O")
 
+    # the guards converted from bare asserts by the analysis PR must all
+    # SURVIVE -O: an uninitialised worker shard, a front door used before
+    # start(), and a flip_update shape-contract violation
+    from repro.core.workers import _worker_map
+    try:
+        _worker_map(None, None, None, 1, True)
+    except RuntimeError:
+        check(True, "uninitialised worker shard raises under -O")
+    else:
+        check(False, "uninitialised worker shard raises under -O")
+
+    import asyncio
+
+    from repro.launch.serve import CompileFrontDoor
+    try:
+        asyncio.run(CompileFrontDoor(pool=None).compile(running_example(),
+                                                        CGRA(2, 2)))
+    except RuntimeError:
+        check(True, "unstarted front door raises under -O")
+    else:
+        check(False, "unstarted front door raises under -O")
+
+    import jax.numpy as jnp
+
+    from repro.kernels.flip_update import flip_update
+    good = dict(assign=jnp.zeros((1, 2, 5), bool),
+                tc=jnp.zeros((1, 2, 3), jnp.int32),
+                v_flip=jnp.zeros((1, 2), jnp.int32),
+                occ_c=jnp.full((1, 2, 4), -1, jnp.int32),
+                occ_s=jnp.zeros((1, 2, 4), bool),
+                new_val=jnp.zeros((1, 2), bool))
+    bad = dict(good, tc=jnp.zeros((1, 3, 3), jnp.int32))
+    flip_update(**good)
+    try:
+        flip_update(**bad)
+    except ValueError:
+        check(True, "flip_update shape contract raises under -O")
+    else:
+        check(False, "flip_update shape contract raises under -O")
+
     print("optimized smoke OK")
 
 

@@ -1,0 +1,202 @@
+"""Tests for `repro.analysis`: the lint rule engine (fixture trees under
+tests/fixtures/lint/), the CLI gate, the fork-safety contract as an
+actual subprocess sys.modules check, and the CNF-auditor regression that
+the whole suite encodes audit-clean in both emitter modes."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import LintConfig, load_baseline, run_lint
+from repro.analysis.lint import write_baseline
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "lint"
+
+
+def lint_tree(name):
+    return run_lint(LintConfig(root=FIXTURES / name))
+
+
+# ------------------------------------------------------------ rule engine
+
+
+@pytest.mark.parametrize("tree,rule,min_findings", [
+    ("fork_bad", "fork-safety", 1),
+    ("opt_bad", "opt-safety", 1),
+    ("hash_bad", "hash-determinism", 3),
+    ("pallas_bad", "pallas-constraints", 3),
+])
+def test_bad_fixture_trips_rule(tree, rule, min_findings):
+    findings = [f for f in lint_tree(tree) if f.rule == rule]
+    assert len(findings) >= min_findings
+    # fingerprints are unique even when the same token repeats
+    fps = [f.fingerprint for f in findings]
+    assert len(fps) == len(set(fps))
+
+
+@pytest.mark.parametrize("tree", ["fork_good", "opt_good", "hash_good",
+                                  "pallas_good"])
+def test_good_fixture_is_clean(tree):
+    assert lint_tree(tree) == []
+
+
+def test_fork_bad_reports_the_chain():
+    (f,) = [f for f in lint_tree("fork_bad") if f.rule == "fork-safety"]
+    assert "pkg.workers" in f.message and "pkg.middle" in f.message
+    assert f.path == "pkg/heavy.py"
+
+
+def test_hash_good_sorted_wrappers_not_flagged():
+    # sorted(set(...)) / sorted({...}) is the sanctioned pattern; the
+    # rule must only flag *raw* unordered iteration
+    assert all(f.rule != "hash-determinism" for f in lint_tree("hash_good"))
+
+
+def test_pallas_ref_may_use_dynamic_numpy():
+    # ref.py in the good tree calls np.nonzero — allowed: the
+    # dynamic-shape checks bind to kernel.py/ops.py only
+    assert lint_tree("pallas_good") == []
+
+
+def test_baseline_suppresses_and_roundtrips(tmp_path):
+    findings = lint_tree("opt_bad")
+    assert findings
+    path = tmp_path / "baseline.txt"
+    write_baseline(path, findings)
+    baseline = load_baseline(path)
+    assert {f.fingerprint for f in findings} <= baseline
+    # and an absent/None baseline suppresses nothing
+    assert load_baseline(None) == set()
+    assert load_baseline(tmp_path / "missing.txt") == set()
+
+
+def test_repo_lints_clean_against_checked_in_baseline():
+    findings = run_lint(LintConfig(root=REPO))
+    baseline = load_baseline(REPO / "src" / "repro" / "analysis"
+                             / "lint_baseline.txt")
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+
+
+# -------------------------------------------------------------------- CLI
+
+
+def _cli(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_exits_zero_on_repo():
+    proc = _cli("--check")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.parametrize("tree", ["fork_bad", "opt_bad", "hash_bad",
+                                  "pallas_bad"])
+def test_cli_nonzero_on_each_injected_violation(tree):
+    proc = _cli("--check", "--root", str(FIXTURES / tree))
+    assert proc.returncode != 0, proc.stdout + proc.stderr
+    assert "FAIL" in proc.stdout
+
+
+@pytest.mark.parametrize("tree", ["fork_good", "opt_good", "hash_good",
+                                  "pallas_good"])
+def test_cli_zero_on_good_fixture(tree):
+    proc = _cli("--check", "--root", str(FIXTURES / tree))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_baseline_override_suppresses(tmp_path):
+    base = tmp_path / "b.txt"
+    findings = lint_tree("opt_bad")
+    write_baseline(base, findings)
+    proc = _cli("--check", "--root", str(FIXTURES / "opt_bad"),
+                "--baseline", str(base))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------- fork-safety, for real
+
+
+def test_workers_import_closure_is_jax_free_subprocess():
+    """The contract the fork-safety lint rule models, checked directly:
+    importing the worker module must not pull jax into sys.modules."""
+    code = ("import sys\n"
+            "import repro.core.workers\n"
+            "bad = [m for m in sys.modules\n"
+            "       if m.split('.')[0] in ('jax', 'jaxlib', 'optax')]\n"
+            "sys.exit(1 if bad else 0)\n")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# --------------------------------------------- converted runtime guards
+
+
+def test_worker_map_unstarted_raises():
+    from repro.core.workers import _worker_map, _worker_stats
+    with pytest.raises(RuntimeError, match="not initialised"):
+        _worker_map(None, None, None, 1, True)
+    with pytest.raises(RuntimeError, match="not initialised"):
+        _worker_stats()
+
+
+def test_front_door_unstarted_raises():
+    import asyncio
+
+    from repro.core.cgra import CGRA
+    from repro.core.dfg import running_example
+    from repro.launch.serve import CompileFrontDoor
+    door = CompileFrontDoor(pool=None)
+    with pytest.raises(RuntimeError, match="not started"):
+        asyncio.run(door.compile(running_example(), CGRA(2, 2)))
+
+
+def test_portfolio_session_window_needs_iis():
+    from repro.core.cgra import CGRA
+    from repro.core.dfg import running_example
+    from repro.core.encode import EncoderSession
+    from repro.core.sat.portfolio import SolverSession, solve_window
+    sess = SolverSession(EncoderSession(running_example(), CGRA(2, 2)),
+                         method="cdcl")
+    cnfs = [sess.project(3)]
+    with pytest.raises(ValueError, match="candidate II"):
+        solve_window(cnfs, method="cdcl", use_walksat=False,
+                     session=sess, iis=None)
+
+
+# ------------------------------------------------- CNF audit regression
+
+
+FABRICS = None  # default: all three suite fabrics
+
+
+@pytest.mark.parametrize("emitters", ["vector", "legacy"])
+def test_suite_audits_clean(emitters):
+    from repro.analysis import audit_suite
+    names = None if emitters == "vector" else ["sha", "nw", "srand",
+                                               "hotspot"]
+    reports = audit_suite(names=names, emitters=emitters)
+    bad = [r for r in reports if not r.ok()]
+    assert bad == [], "\n".join(r.summary() for r in bad)
+    # every cold report carries all four families, and the actual clause
+    # counts equal the closed-form analytic expectations
+    for r in reports:
+        if r.mode == "cold":
+            assert set(r.family_counts) == {"c1", "c2", "c2w", "c3"}
+            for fam, (actual, expected) in r.family_counts.items():
+                assert actual == expected, (r.cell, fam, actual, expected)
+            assert r.family_counts["c1"][0] > 0
+            assert r.family_counts["c3"][0] > 0
+
+
+def test_audit_sequential_amo_clean():
+    from repro.analysis import audit_suite
+    reports = audit_suite(names=["sha", "nw"], amo="sequential")
+    assert all(r.ok() for r in reports)
